@@ -1,0 +1,17 @@
+"""Batched serving example: prefill a batch of prompts, decode greedily
+with the donated sharded KV/SSD state, report tokens/sec.
+
+    PYTHONPATH=src python examples/serve_batch.py --arch mamba2-130m
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.serve import main as serve_main
+
+if __name__ == "__main__":
+    argv = sys.argv[1:]
+    if "--reduced" not in argv:
+        argv.append("--reduced")
+    serve_main(argv)

@@ -1,0 +1,82 @@
+"""Render EXPERIMENTS.md tables from the dry-run JSON artifacts."""
+import glob
+import json
+import os
+import sys
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+
+
+def load(out_dir=None):
+    out_dir = out_dir or os.path.join(HERE, "dryrun")
+    cells = {}
+    for p in glob.glob(os.path.join(out_dir, "*.json")):
+        r = json.load(open(p))
+        cells[(r["arch"], r["shape"], r["mesh"])] = r
+    return cells
+
+
+def fmt_t(x):
+    if x >= 1:
+        return f"{x:.2f}s"
+    return f"{x * 1e3:.1f}ms"
+
+
+def roofline_table(cells, mesh="single"):
+    rows = ["| arch | shape | kind | compute_t | memory_t | coll_t | "
+            "dominant | useful | roofline |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for (a, s, m), r in sorted(cells.items()):
+        if m != mesh:
+            continue
+        if r["status"] == "skipped":
+            rows.append(f"| {a} | {s} | — | — | — | — | skipped | — | — |")
+            continue
+        if r["status"] != "ok":
+            rows.append(f"| {a} | {s} | — | — | — | — | ERROR | — | — |")
+            continue
+        rows.append(
+            f"| {a} | {s} | {r['kind']} | {fmt_t(r['compute_t'])} | "
+            f"{fmt_t(r['memory_t'])} | {fmt_t(r['collective_t'])} | "
+            f"{r['dominant']} | {r['useful_flop_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.3f} |")
+    return "\n".join(rows)
+
+
+def memory_table(cells, mesh="multi"):
+    rows = ["| arch | shape | args GB/dev | temp GB/dev | fits 16G? |",
+            "|---|---|---|---|---|"]
+    for (a, s, m), r in sorted(cells.items()):
+        if m != mesh or r["status"] != "ok":
+            continue
+        arg = r["memory"]["argument_bytes"] / 2**30
+        tmp = r["memory"]["temp_bytes"] / 2**30
+        fits = "yes" if arg + tmp < 16 else "**NO**"
+        rows.append(f"| {a} | {s} | {arg:.2f} | {tmp:.2f} | {fits} |")
+    return "\n".join(rows)
+
+
+def multi_vs_single(cells):
+    rows = ["| arch | shape | coll bytes/chip 1-pod | 2-pod | ratio |",
+            "|---|---|---|---|---|"]
+    for (a, s, m), r in sorted(cells.items()):
+        if m != "single" or r["status"] != "ok":
+            continue
+        r2 = cells.get((a, s, "multi"))
+        if not r2 or r2["status"] != "ok":
+            continue
+        c1 = r["collective_bytes_per_chip"]
+        c2 = r2["collective_bytes_per_chip"]
+        rows.append(f"| {a} | {s} | {c1 / 1e9:.2f}G | {c2 / 1e9:.2f}G | "
+                    f"{c2 / max(c1, 1):.2f} |")
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    cells = load(sys.argv[1] if len(sys.argv) > 1 else None)
+    print("## Roofline (single-pod, 256 chips)\n")
+    print(roofline_table(cells, "single"))
+    print("\n## Multi-pod memory\n")
+    print(memory_table(cells, "multi"))
+    print("\n## Cross-pod collective growth\n")
+    print(multi_vs_single(cells))

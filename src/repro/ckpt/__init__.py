@@ -1,0 +1,1 @@
+from .checkpoint import save, restore, latest_step, CheckpointManager

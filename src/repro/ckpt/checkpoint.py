@@ -1,0 +1,168 @@
+"""Crash-safe checkpointing with atomic commit and auto-resume.
+
+Protocol (two-phase):
+  1. write ``step_<n>.tmp/`` with one ``.npy`` per leaf plus a
+     ``manifest.json`` (tree structure, dtypes, step, wall time, and a
+     per-file checksum);
+  2. ``os.replace`` the directory to ``step_<n>/`` — atomic on POSIX.
+
+A reader only trusts directories with a manifest whose checksums match,
+so a worker that dies mid-write can never poison a restart: ``restore``
+walks backward through steps until it finds a complete one (the
+node-failure story — any surviving worker re-launches from the last
+committed step, and the stateless data pipeline regenerates its shards).
+
+Checkpoints store *logical* (unsharded) arrays keyed by tree path, so a
+restart may use a different mesh shape — resharding happens when the
+restored tree is device_put against the new sharding (elastic scaling).
+At multi-host scale each host would save only the shards it owns under
+the same manifest scheme; this container is single-host so the code
+path writes full arrays (noted in DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import re
+import shutil
+import time
+from typing import Any, Optional
+
+import jax
+import ml_dtypes  # bf16 et al. round-trip as raw bytes + manifest dtype
+import numpy as np
+
+_NATIVE = set("?bhilqBHILQefdFD")
+
+
+def _to_disk(arr: np.ndarray) -> np.ndarray:
+    if arr.dtype.char in _NATIVE:
+        return arr
+    return arr.view(np.uint8)  # exotic dtype: store raw bytes
+
+
+def _from_disk(arr: np.ndarray, dtype_str: str, shape) -> np.ndarray:
+    if str(arr.dtype) == dtype_str:
+        return arr
+    return arr.view(np.dtype(dtype_str)).reshape(shape)
+
+
+def _flatten_with_paths(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        name = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        out.append((name, leaf))
+    return out
+
+
+def save(directory: str, step: int, tree: Any, extra: Optional[dict] = None):
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    manifest = {"step": step, "time": time.time(), "files": {},
+                "extra": extra or {}}
+    for name, leaf in _flatten_with_paths(tree):
+        arr = np.asarray(leaf)
+        fname = name.replace("/", "__") + ".npy"
+        np.save(os.path.join(tmp, fname), _to_disk(arr))
+        with open(os.path.join(tmp, fname), "rb") as f:
+            digest = hashlib.sha256(f.read()).hexdigest()[:16]
+        manifest["files"][name] = {"file": fname, "dtype": str(arr.dtype),
+                                   "shape": list(arr.shape),
+                                   "sha": digest}
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)  # atomic commit
+    return final
+
+
+def _verify(path: str) -> Optional[dict]:
+    mf = os.path.join(path, "manifest.json")
+    if not os.path.exists(mf):
+        return None
+    try:
+        manifest = json.load(open(mf))
+        for name, meta in manifest["files"].items():
+            fp = os.path.join(path, meta["file"])
+            with open(fp, "rb") as f:
+                if hashlib.sha256(f.read()).hexdigest()[:16] != meta["sha"]:
+                    return None
+        return manifest
+    except Exception:
+        return None
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = sorted(
+        (int(m.group(1)) for d in os.listdir(directory)
+         if (m := re.fullmatch(r"step_(\d+)", d))), reverse=True)
+    for s in steps:
+        if _verify(os.path.join(directory, f"step_{s:08d}")):
+            return s
+    return None
+
+
+def restore(directory: str, tree_like: Any, step: Optional[int] = None):
+    """Restore into the structure of ``tree_like``; returns (tree, step)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no complete checkpoint in {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    manifest = _verify(path)
+    if manifest is None:
+        raise IOError(f"checkpoint {path} failed verification")
+    leaves = {}
+    for name, meta in manifest["files"].items():
+        raw = np.load(os.path.join(path, meta["file"]))
+        leaves[name] = _from_disk(raw, meta["dtype"], meta["shape"])
+    names = [n for n, _ in _flatten_with_paths(tree_like)]
+    missing = [n for n in names if n not in leaves]
+    if missing:
+        raise KeyError(f"checkpoint missing leaves: {missing[:5]}...")
+    flat = [leaves[n] for n in names]
+    tdef = jax.tree_util.tree_structure(tree_like)
+    return jax.tree_util.tree_unflatten(tdef, flat), step
+
+
+@dataclasses.dataclass
+class CheckpointManager:
+    """Every-N-steps saver with retention and auto-resume."""
+    directory: str
+    every: int = 100
+    keep: int = 3
+
+    def maybe_save(self, step: int, tree: Any, extra: Optional[dict] = None):
+        if step % self.every:
+            return None
+        path = save(self.directory, step, tree, extra)
+        self._gc()
+        return path
+
+    def _gc(self):
+        if not os.path.isdir(self.directory):
+            return
+        steps = sorted(
+            (int(m.group(1)) for d in os.listdir(self.directory)
+             if (m := re.fullmatch(r"step_(\d+)", d))), reverse=True)
+        for s in steps[self.keep:]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    def resume(self, tree_like: Any):
+        step = latest_step(self.directory)
+        if step is None:
+            return None, 0
+        tree, s = restore(self.directory, tree_like, step)
+        return tree, s

@@ -1,0 +1,105 @@
+"""Block scheduler: grids of thread blocks onto one or more SMs.
+
+The paper's block scheduler assigns thread blocks to SMs round-robin
+(§4.3); with 2 SMs the workload per SM roughly halves, giving the
+1.77–1.98× scalings of Table 3.  Here:
+
+* functional execution — blocks are data-independent (CUDA semantics for
+  all five paper benchmarks), so we batch them with ``vmap`` in chunks
+  and merge their disjoint global-memory write sets;
+* timing — each block's cycle count comes from its SM run; the
+  multi-SM kernel time is ``max over SMs of (sum of its blocks' cycles)``
+  under round-robin assignment, plus a per-block scheduling overhead.
+
+The same blocks→SMs round-robin map reappears at cluster scale as the
+data-parallel shard assignment in :mod:`repro.launch.mesh` — the paper's
+scheduling idea lifted from SMs to chips (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import isa
+from .machine import MachineConfig, _run_block_jit
+
+# Cycles the block scheduler spends dispatching one block (parameter pass,
+# register-file id init — §3.1 "initializes registers ... with thread IDs").
+BLOCK_SCHED_OVERHEAD = 24
+
+
+class GridResult(NamedTuple):
+    gmem: np.ndarray            # final global memory
+    cycles_per_block: np.ndarray
+    op_issues: np.ndarray       # (NUM_OPCODES,) int64, summed over blocks
+    op_lanes: np.ndarray        # (NUM_OPCODES,) int64
+    stack_ops: int
+    max_sp: int
+    overflow: bool
+
+    def sm_cycles(self, n_sm: int) -> int:
+        """Kernel time on ``n_sm`` SMs under round-robin block assignment."""
+        per_sm = np.zeros(n_sm, np.int64)
+        for b, cyc in enumerate(self.cycles_per_block):
+            per_sm[b % n_sm] += int(cyc) + BLOCK_SCHED_OVERHEAD
+        return int(per_sm.max())
+
+
+@functools.partial(jax.jit, static_argnums=(0, 2))
+def _run_chunk(cfg, code, block_dim, block_dim_xy, block_xys, grid_xy, gmem):
+    """vmap a chunk of blocks over identical initial global memory."""
+    run = lambda bxy: _run_block_jit(cfg, code, block_dim, block_dim_xy,
+                                     bxy, grid_xy, gmem)
+    return jax.vmap(run)(block_xys)
+
+
+def run_grid(code, grid: Tuple[int, int], block_dim, gmem,
+             cfg: MachineConfig = MachineConfig(),
+             chunk: int = 8) -> GridResult:
+    """Execute ``grid`` = (gx, gy) thread blocks of ``block_dim`` threads.
+
+    Blocks may not communicate (true of the paper's benchmarks); their
+    global write sets are merged after each chunk.  Writes to the same
+    address from two blocks in one chunk are resolved in block order.
+    """
+    if isinstance(block_dim, tuple):
+        bdx, bdy = block_dim
+    else:
+        bdx, bdy = block_dim, 1
+    gx, gy = grid
+    xs, ys = np.meshgrid(np.arange(gx), np.arange(gy))
+    bxys = np.stack([xs.ravel(), ys.ravel()], 1).astype(np.int32)
+    n_blocks = len(bxys)
+
+    gmem = np.asarray(gmem, np.int32)
+    cycles = np.zeros(n_blocks, np.int64)
+    op_issues = np.zeros(isa.NUM_OPCODES, np.int64)
+    op_lanes = np.zeros(isa.NUM_OPCODES, np.int64)
+    stack_ops, max_sp, overflow = 0, 0, False
+
+    code = jnp.asarray(code, jnp.int32)
+    bdxy = jnp.asarray([bdx, bdy], jnp.int32)
+    gxy = jnp.asarray([gx, gy], jnp.int32)
+
+    for lo in range(0, n_blocks, chunk):
+        hi = min(lo + chunk, n_blocks)
+        mem_out, written, ctr = _run_chunk(
+            cfg, code, bdx * bdy, bdxy, jnp.asarray(bxys[lo:hi]), gxy,
+            jnp.asarray(gmem))
+        mem_out = np.asarray(mem_out)
+        written = np.asarray(written)
+        for j in range(hi - lo):
+            gmem = np.where(written[j], mem_out[j], gmem).astype(np.int32)
+        cycles[lo:hi] = np.asarray(ctr.cycles, np.int64)
+        op_issues += np.asarray(ctr.op_issues, np.int64).sum(0)
+        op_lanes += np.asarray(ctr.op_lanes, np.int64).sum(0)
+        stack_ops += int(np.asarray(ctr.stack_ops, np.int64).sum())
+        max_sp = max(max_sp, int(np.asarray(ctr.max_sp).max()))
+        overflow |= bool(np.asarray(ctr.overflow).any())
+
+    return GridResult(gmem, cycles, op_issues, op_lanes, stack_ops,
+                      max_sp, overflow)

@@ -1,0 +1,94 @@
+"""Flash-attention (streaming-softmax) Pallas kernel for TPU.
+
+Causal attention with online softmax: for each (batch*head, q-block),
+sweep KV blocks, maintaining running max ``m``, normalizer ``l`` and
+the unnormalized accumulator in VMEM scratch.  Causality is enforced
+per-block: fully-masked KV blocks are skipped via the grid (we only
+iterate up to the diagonal block) and the diagonal block applies an
+elementwise mask.
+
+Block sizes default to (BQ, BK) = (256, 256); the VMEM working set is
+q(BQ,dh) + k/v(BK,dh) + acc(BQ,dh) + logits(BQ,BK) fp32 ~= 1.3 MB at
+dh=128.  dh is kept whole (<= 256 for all assigned archs).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, bq: int, bk: int, n_k: int):
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    qb = pl.program_id(1)
+    run = (not causal) or (kb * bk <= qb * bq + bq - 1)
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0].astype(jnp.float32)              # (BQ, dh)
+        k = k_ref[0].astype(jnp.float32)              # (BK, dh)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        if causal:
+            qi = qb * bq + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            ki = kb * bk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(qi >= ki, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p.astype(v_ref.dtype), v_ref[0],
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(kb == n_k - 1)
+    def _done():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "bq", "bk", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, bq: int = 256,
+                    bk: int = 256, interpret: bool = False):
+    """q: (BH, Sq, dh), k/v: (BH, Sk, dh) -> (BH, Sq, dh).
+
+    Callers fold batch and heads into the leading axis and repeat KV
+    heads for GQA (see ops.mha).
+    """
+    BH, Sq, dh = q.shape
+    Sk = k.shape[1]
+    bq = min(bq, Sq)
+    bk = min(bk, Sk)
+    assert Sq % bq == 0 and Sk % bk == 0
+    scale = dh ** -0.5
+    n_k = Sk // bk
+    grid = (BH, Sq // bq, n_k)
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, causal=causal,
+                          bq=bq, bk=bk, n_k=n_k),
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, bq, dh), lambda b, i, j: (b, i, 0)),
+                  pl.BlockSpec((1, bk, dh), lambda b, i, j: (b, j, 0)),
+                  pl.BlockSpec((1, bk, dh), lambda b, i, j: (b, j, 0))],
+        out_specs=pl.BlockSpec((1, bq, dh), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, dh), q.dtype),
+        scratch_shapes=[pltpu.VMEM((bq, 1), jnp.float32),
+                        pltpu.VMEM((bq, 1), jnp.float32),
+                        pltpu.VMEM((bq, dh), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v)

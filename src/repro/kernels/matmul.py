@@ -1,0 +1,53 @@
+"""MXU-tiled block matmul Pallas kernel (bf16 in, fp32 accumulate).
+
+BlockSpec tiling: (BM, BK) x (BK, BN) -> (BM, BN) with a fp32 VMEM
+accumulator scratch; K is the innermost grid axis so the accumulator
+lives across the K sweep (revisiting pattern).  Tiles are multiples of
+128 to align with the 128x128 MXU systolic array; VMEM working set is
+BM*BK + BK*BN + BM*BN fp32 <= ~4 MB for the default 512/512/512.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mm_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def matmul(a, b, *, bm: int = 512, bn: int = 512, bk: int = 512,
+           interpret: bool = False):
+    """a: (M, K) @ b: (K, N) -> (M, N); dtype follows ``a``."""
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2
+    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (M, N, K, bm, bn, bk)
+    n_k = K // bk
+    return pl.pallas_call(
+        functools.partial(_mm_kernel, n_k=n_k),
+        grid=(M // bm, N // bn, n_k),
+        in_specs=[pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+                  pl.BlockSpec((bk, bn), lambda i, j, k: (k, j))],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(a, b)

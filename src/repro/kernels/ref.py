@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import isa
+
+
+def simt_alu_ref(op, imm, s1, s2, s3, mask, *, enable_mul: bool = True):
+    """Oracle for kernels.simt_alu: same semantics, plain jnp."""
+    opb = op[:, None]
+    sh = s2 & 31
+    u1 = s1.astype(jnp.uint32)
+    mul = (s1 * s2) if enable_mul else jnp.zeros_like(s1)
+    mad = (s1 * s2 + s3) if enable_mul else jnp.zeros_like(s1)
+    res = jnp.select(
+        [opb == o for o in (isa.MOV, isa.IADD, isa.ISUB, isa.IMUL,
+                            isa.IMAD, isa.IMIN, isa.IMAX, isa.IABS,
+                            isa.AND, isa.OR, isa.XOR, isa.NOT, isa.SHL,
+                            isa.SHR, isa.SAR)],
+        [s2, s1 + s2, s1 - s2, mul, mad, jnp.minimum(s1, s2),
+         jnp.maximum(s1, s2), jnp.abs(s1), s1 & s2, s1 | s2, s1 ^ s2,
+         ~s1, (u1 << sh.astype(jnp.uint32)).astype(jnp.int32),
+         (u1 >> sh.astype(jnp.uint32)).astype(jnp.int32), s1 >> sh],
+        jnp.zeros_like(s1))
+    d = s1 - s2
+    nib = ((d < 0).astype(jnp.int32)
+           | ((d == 0).astype(jnp.int32) << 1)
+           | ((u1 < s2.astype(jnp.uint32)).astype(jnp.int32) << 2)
+           | ((((s1 ^ s2) & (s1 ^ d)) < 0).astype(jnp.int32) << 3))
+    m = mask != 0
+    return (jnp.where(m, res, 0),
+            jnp.where(m & (opb == isa.ISETP), nib, 0))
+
+
+def matmul_ref(a, b):
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(a.dtype)
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True):
+    """Oracle for kernels.flash_attention (fp32 softmax)."""
+    BH, Sq, dh = q.shape
+    Sk = k.shape[1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * dh ** -0.5
+    if causal:
+        mask = jnp.tril(jnp.ones((Sq, Sk), bool), k=Sk - Sq)
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

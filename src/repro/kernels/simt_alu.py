@@ -1,0 +1,110 @@
+"""Pallas TPU kernel for the SM execute stage (the SP array).
+
+The hot loop of the soft-SIMT interpreter is the Execute stage: apply
+one decoded integer instruction across all (warp, lane) pairs under the
+active mask.  On the FPGA this is the array of scalar processors plus
+DSP multipliers; on TPU the natural mapping is a VPU-wide vectorized
+select-by-opcode over a (warps, lanes) tile resident in VMEM — the
+MXU is useless for 32-bit integer ALU work, so this is a VPU kernel.
+
+The kernel evaluates a *batch* of decoded instructions (one per warp
+row) in one launch: operands are pre-gathered (the Read stage), the
+kernel applies the per-warp opcode/immediate lanes-wide, and returns
+results plus ISETP predicate nibbles.  Block shape is (WARP_TILE, 128):
+lanes padded 32 -> 128 to fill a VPU register row.
+
+ref.py holds the pure-jnp oracle; tests sweep opcode x shape x dtype in
+interpret mode (CPU executes the kernel body).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import isa
+
+LANE_TILE = 128     # pad 32 lanes to one full VPU row
+WARP_TILE = 8       # warps per block
+
+
+def _alu_kernel(op_ref, imm_ref, s1_ref, s2_ref, s3_ref, mask_ref,
+                out_ref, nib_ref, *, enable_mul: bool):
+    """One block: (WARP_TILE, LANE_TILE) lanes, per-warp op/imm."""
+    s1 = s1_ref[...]
+    s2 = s2_ref[...]
+    s3 = s3_ref[...]
+    mask = mask_ref[...] != 0
+    op = op_ref[...]          # (WARP_TILE, 1) int32, broadcast over lanes
+    imm = imm_ref[...]
+
+    sh = s2 & 31
+    u1 = s1.astype(jnp.uint32)
+    mul = (s1 * s2) if enable_mul else jnp.zeros_like(s1)
+    mad = (s1 * s2 + s3) if enable_mul else jnp.zeros_like(s1)
+
+    def sel(code, val, default):
+        return jnp.where(op == code, val, default)
+
+    res = jnp.zeros_like(s1)
+    res = sel(isa.MOV, s2, res)
+    res = sel(isa.IADD, s1 + s2, res)
+    res = sel(isa.ISUB, s1 - s2, res)
+    res = sel(isa.IMUL, mul, res)
+    res = sel(isa.IMAD, mad, res)
+    res = sel(isa.IMIN, jnp.minimum(s1, s2), res)
+    res = sel(isa.IMAX, jnp.maximum(s1, s2), res)
+    res = sel(isa.IABS, jnp.abs(s1), res)
+    res = sel(isa.AND, s1 & s2, res)
+    res = sel(isa.OR, s1 | s2, res)
+    res = sel(isa.XOR, s1 ^ s2, res)
+    res = sel(isa.NOT, ~s1, res)
+    res = sel(isa.SHL, (u1 << sh.astype(jnp.uint32)).astype(jnp.int32), res)
+    res = sel(isa.SHR, (u1 >> sh.astype(jnp.uint32)).astype(jnp.int32), res)
+    res = sel(isa.SAR, s1 >> sh, res)
+    res = sel(isa.MOV + 100, imm, res)  # unreachable; keeps imm live
+
+    # ISETP flag nibble (sign, zero, carry, overflow) of s1 - s2
+    d = s1 - s2
+    f_s = (d < 0).astype(jnp.int32)
+    f_z = (d == 0).astype(jnp.int32)
+    f_c = (u1 < s2.astype(jnp.uint32)).astype(jnp.int32)
+    f_o = (((s1 ^ s2) & (s1 ^ d)) < 0).astype(jnp.int32)
+    nib = f_s | (f_z << 1) | (f_c << 2) | (f_o << 3)
+
+    out_ref[...] = jnp.where(mask, res, s1 * 0)
+    nib_ref[...] = jnp.where(mask & (op == isa.ISETP), nib, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("enable_mul", "interpret"))
+def simt_alu(op, imm, s1, s2, s3, mask, *, enable_mul: bool = True,
+             interpret: bool = False):
+    """Vector execute stage.
+
+    op/imm: (W,) int32 per warp; s1/s2/s3/mask: (W, LANES) int32.
+    Returns (result (W, LANES) int32, isetp nibble (W, LANES) int32).
+    """
+    W, LANES = s1.shape
+    Wp = (W + WARP_TILE - 1) // WARP_TILE * WARP_TILE
+
+    def pad(x, fill=0):
+        return jnp.pad(x, ((0, Wp - W), (0, LANE_TILE - LANES)),
+                       constant_values=fill)
+
+    opp = jnp.pad(op, (0, Wp - W))[:, None]
+    immp = jnp.pad(imm, (0, Wp - W))[:, None]
+    grid = (Wp // WARP_TILE,)
+    wspec = pl.BlockSpec((WARP_TILE, 1), lambda i: (i, 0))
+    lspec = pl.BlockSpec((WARP_TILE, LANE_TILE), lambda i: (i, 0))
+    out, nib = pl.pallas_call(
+        functools.partial(_alu_kernel, enable_mul=enable_mul),
+        grid=grid,
+        in_specs=[wspec, wspec, lspec, lspec, lspec, lspec],
+        out_specs=[lspec, lspec],
+        out_shape=[jax.ShapeDtypeStruct((Wp, LANE_TILE), jnp.int32),
+                   jax.ShapeDtypeStruct((Wp, LANE_TILE), jnp.int32)],
+        interpret=interpret,
+    )(opp, immp, pad(s1), pad(s2), pad(s3), pad(mask))
+    return out[:W, :LANES], nib[:W, :LANES]

@@ -1,0 +1,405 @@
+"""Trip-count-aware cost analysis of optimized HLO text.
+
+XLA's built-in ``HloCostAnalysis`` (what ``compiled.cost_analysis()``
+reports) counts a ``while`` body ONCE, so any scan-over-layers model
+under-reports FLOPs/bytes by ~n_layers and misses collectives inside
+the loop entirely.  This module re-derives the three roofline terms by
+walking the HLO call graph with loop trip counts:
+
+* parses every computation and its ops (result/operand shapes inline);
+* dot FLOPs = 2 * prod(result) * prod(contracting dims); elementwise
+  arithmetic ~1 flop/element (transcendentals 4);
+* bytes = operands + results of top-level (post-fusion) ops — i.e. the
+  HBM traffic a perfectly-fused executor would see;
+* collective bytes from all-gather/all-reduce/reduce-scatter/all-to-all/
+  collective-permute result shapes;
+* ``while`` body/condition costs are multiplied by the trip count
+  recovered from the canonical XLA induction pattern (compare against a
+  constant in the condition computation); fusion/call/map computations
+  are inlined for FLOPs (their internal intermediates are NOT charged
+  bytes — that's the point of fusion).
+
+This is the measurement instrument for EXPERIMENTS.md §Roofline/§Perf.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {"pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2,
+                "u16": 2, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+                "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+                "c128": 16, "token": 0, "opaque": 0, "f8e4m3fn": 1,
+                "f8e5m2": 1, "f8e4m3b11fnuz": 1, "f8e4m3": 1, "f8e5m2fnuz": 1}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute", "ragged-all-to-all")
+
+_ELEMENTWISE1 = {"add", "subtract", "multiply", "divide", "maximum",
+                 "minimum", "and", "or", "xor", "not", "negate", "abs",
+                 "compare", "select", "shift-left", "shift-right-logical",
+                 "shift-right-arithmetic", "clamp", "floor", "ceil",
+                 "round-nearest-afz", "sign", "remainder"}
+_ELEMENTWISE4 = {"exponential", "log", "tanh", "rsqrt", "sqrt", "power",
+                 "logistic", "sine", "cosine", "expm1", "log1p", "atan2",
+                 "erf", "cbrt", "exponential-minus-one"}
+
+# ops whose operands/results must actually touch HBM even under perfect
+# fusion (a TPU-like executor); pure elementwise chains are assumed fused
+_HEAVY = {"dot", "dot-general", "convolution", "reduce", "reduce-window",
+          "gather", "scatter", "dynamic-slice", "dynamic-update-slice",
+          "sort", "concatenate", "pad", "select-and-scatter", "topk",
+          "transpose", "cumsum", "rng"}
+# slice-like ops touch only the moved slice, not the aliased base buffer
+_SLICE_READ = {"dynamic-slice", "gather"}
+_SLICE_WRITE = {"dynamic-update-slice", "scatter"}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(?[^=]*?\)?)\s*"
+    r"([\w\-]+)\((.*)$")
+
+
+def _shape_elems_bytes(text: str) -> Tuple[int, int]:
+    elems = bytes_ = 0
+    for m in _SHAPE_RE.finditer(text):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        bytes_ += n * _DTYPE_BYTES[dt]
+    return elems, bytes_
+
+
+@dataclasses.dataclass
+class OpCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    transcendental: float = 0.0
+    collective_bytes: float = 0.0
+    collective_bytes_bf16: float = 0.0  # TPU-dtype-normalized (see below)
+    coll_by_type: Optional[Dict[str, float]] = None
+    coll_count: float = 0.0
+    scope_bytes: float = 0.0   # bytes of heavy ops inside SCOPE_RE
+
+    def __iadd__(self, o):
+        self.flops += o.flops
+        self.bytes += o.bytes
+        self.transcendental += o.transcendental
+        self.collective_bytes += o.collective_bytes
+        self.collective_bytes_bf16 += o.collective_bytes_bf16
+        self.coll_count += o.coll_count
+        self.scope_bytes += o.scope_bytes
+        if o.coll_by_type:
+            self.coll_by_type = self.coll_by_type or {}
+            for k, v in o.coll_by_type.items():
+                self.coll_by_type[k] = self.coll_by_type.get(k, 0) + v
+        return self
+
+    def scaled(self, mult: float) -> "OpCost":
+        return OpCost(self.flops * mult, self.bytes * mult,
+                      self.transcendental * mult,
+                      self.collective_bytes * mult,
+                      self.collective_bytes_bf16 * mult,
+                      {k: v * mult for k, v in (self.coll_by_type or {}).items()},
+                      self.coll_count * mult,
+                      self.scope_bytes * mult)
+
+
+# heavy ops whose op_name metadata matches this live inside a region that
+# the TPU deployment replaces with the Pallas flash kernel (VMEM tiles,
+# no HBM logits); analyze() reports their bytes separately so the
+# dry-run can produce a kernel-adjusted memory term.
+SCOPE_RE = re.compile(r"flashable_attn")
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    lines: List[str]
+
+
+def parse_computations(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    depth = 0
+    for line in hlo.splitlines():
+        # strip /*...*/ comments: long tuple shapes carry /*index=N*/
+        # markers whose '=' breaks op-line matching
+        s = re.sub(r"/\*.*?\*/", "", line).rstrip()
+        if cur is None:
+            m = re.match(r"\s*(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*\{\s*$",
+                         s)
+            if m:
+                cur = Computation(m.group(1), [])
+                depth = s.count("{") - s.count("}")
+                if depth <= 0:
+                    comps[cur.name] = cur
+                    cur = None
+            continue
+        depth += s.count("{") - s.count("}")
+        if depth <= 0:
+            comps[cur.name] = cur
+            cur = None
+        else:
+            cur.lines.append(s)
+    return comps
+
+
+def _operands(rest: str) -> list:
+    """Operand %names from an op's argument list (up to the close paren)."""
+    args = rest.split("), ")[0] if "), " in rest else rest
+    return re.findall(r"%([\w.\-]+)", args)
+
+
+def _dot_flops(result_shape: str, line: str, defs: Dict[str, str]) -> float:
+    elems, _ = _shape_elems_bytes(result_shape)
+    mc = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
+    mop = re.search(r"dot\((.*?)\)", line)
+    if not mc or not mop:
+        return 2.0 * elems
+    ops = re.findall(r"%([\w.\-]+)", mop.group(1))
+    if not ops or ops[0] not in defs:
+        return 2.0 * elems
+    lm = _SHAPE_RE.search(defs[ops[0]])
+    if not lm:
+        return 2.0 * elems
+    lhs_dims = [int(d) for d in lm.group(2).split(",") if d]
+    k = 1
+    for ci in mc.group(1).split(","):
+        if ci:
+            idx = int(ci)
+            if idx < len(lhs_dims):
+                k *= lhs_dims[idx]
+    return 2.0 * elems * k
+
+
+def analyze(hlo: str, entry: Optional[str] = None) -> OpCost:
+    comps = parse_computations(hlo)
+    if entry is None:
+        m = re.search(r"ENTRY\s+%?([\w.\-]+)", hlo)
+        entry = m.group(1) if m else next(iter(comps))
+    memo: Dict[str, OpCost] = {}
+    defs_memo: Dict[str, Dict[str, str]] = {}
+    heavy_memo: Dict[str, str] = {}
+
+    def comp_kind(name: str) -> str:
+        """'' (pure elementwise) | 'slice_w' | 'slice_r' | 'heavy'."""
+        if name in heavy_memo:
+            return heavy_memo[name]
+        heavy_memo[name] = ""  # cycle guard
+        comp = comps.get(name)
+        kind = ""
+        rank = {"": 0, "slice_r": 1, "slice_w": 2, "heavy": 3}
+        if comp:
+            for line in comp.lines:
+                m = _OP_RE.match(line)
+                if not m:
+                    continue
+                oc = m.group(3)
+                k = ""
+                if oc in _SLICE_WRITE:
+                    k = "slice_w"
+                elif oc in _SLICE_READ:
+                    k = "slice_r"
+                elif oc in _HEAVY:
+                    k = "heavy"
+                elif oc == "fusion":
+                    fc = re.search(r"calls=%?([\w.\-]+)", line)
+                    if fc:
+                        k = comp_kind(fc.group(1))
+                if rank[k] > rank[kind]:
+                    kind = k
+        heavy_memo[name] = kind
+        return kind
+
+    def comp_defs(name: str) -> Dict[str, str]:
+        if name not in defs_memo:
+            d = {}
+            comp = comps.get(name)
+            if comp:
+                for line in comp.lines:
+                    m = _OP_RE.match(line)
+                    if m:
+                        d[m.group(1)] = m.group(2)
+            defs_memo[name] = d
+        return defs_memo[name]
+
+    def comp_cost(name: str, top_level: bool) -> OpCost:
+        key = f"{name}|{top_level}"
+        if key in memo:
+            return memo[key]
+        total = OpCost(coll_by_type={})
+        comp = comps.get(name)
+        if comp is None:
+            memo[key] = total
+            return total
+        defs = comp_defs(name)
+
+        def _operand_sizes(rest: str):
+            return [_shape_elems_bytes(defs[o])[1] for o in _operands(rest)
+                    if o in defs]
+
+        def operand_bytes(rest: str) -> int:
+            return sum(_operand_sizes(rest))
+
+        for line in comp.lines:
+            m = _OP_RE.match(line)
+            if not m:
+                continue
+            _, result_shape, opcode, rest = m.groups()
+            # --- control flow / calls
+            if opcode == "while":
+                body = re.search(r"body=%?([\w.\-]+)", line)
+                condc = re.search(r"condition=%?([\w.\-]+)", line)
+                mt = re.search(r'known_trip_count[^0-9]*(\d+)', line)
+                if mt:
+                    trip = float(mt.group(1))
+                else:
+                    trip = _trip_count(comps, condc.group(1)) if condc else 1
+                if body:
+                    total += comp_cost(body.group(1), top_level).scaled(trip)
+                if condc:
+                    total += comp_cost(condc.group(1), False).scaled(trip)
+                continue
+            if opcode in ("call", "map"):
+                cc = re.search(r"to_apply=%?([\w.\-]+)", line)
+                if cc:
+                    total += comp_cost(cc.group(1), top_level)
+                continue
+            if opcode == "conditional":
+                for cc in re.finditer(r"(?:branch_computations=\{([^}]*)\}|"
+                                      r"(?:true|false)_computation=%?"
+                                      r"([\w.\-]+))", line):
+                    names = (cc.group(1) or cc.group(2) or "").split(",")
+                    for nm in names:
+                        nm = nm.strip().lstrip("%")
+                        if nm:
+                            total += comp_cost(nm, top_level)
+                continue
+            if opcode == "fusion":
+                fc = re.search(r"calls=%?([\w.\-]+)", line)
+                heavy = False
+                if fc:
+                    inner = comp_cost(fc.group(1), False)
+                    heavy = comp_kind(fc.group(1))
+                    total += OpCost(flops=inner.flops,
+                                    transcendental=inner.transcendental,
+                                    collective_bytes=inner.collective_bytes,
+                                    coll_by_type=inner.coll_by_type,
+                                    coll_count=inner.coll_count)
+                # only fusions that materialize (slice/update/reduce/...)
+                # are charged HBM bytes; elementwise fusions are assumed
+                # fused into their producers/consumers on TPU
+                if top_level and heavy:
+                    _, rb = _shape_elems_bytes(result_shape)
+                    if heavy == "slice_w":
+                        # in-place update: traffic ~ 2x the non-aliased
+                        # operands (the update slice), not the base buffer
+                        b = 2 * sum(x for x in _operand_sizes(rest)
+                                    if x < rb)
+                    elif heavy == "slice_r":
+                        b = 2 * rb
+                    else:
+                        b = rb + operand_bytes(rest)
+                    total += OpCost(bytes=b,
+                                    scope_bytes=b if SCOPE_RE.search(line)
+                                    else 0.0)
+                continue
+            # --- collectives
+            base_op = opcode[:-6] if opcode.endswith("-start") else opcode
+            if base_op in _COLLECTIVES:
+                if opcode.endswith("-done"):
+                    continue
+                _, b = _shape_elems_bytes(result_shape)
+                # TPU-dtype normalization: XLA:CPU legalizes bf16 dots to
+                # f32 and hoists the convert above SPMD collectives, so
+                # param/activation/cotangent tensors (bf16 by declaration,
+                # DESIGN.md) travel at f32 width in the lowered module.
+                # On the TPU target they travel bf16: count f32
+                # collectives at half width in the normalized term.
+                b16 = b / 2 if re.search(r"\bf32\[", " " + result_shape) \
+                    else b
+                total += OpCost(collective_bytes=b,
+                                collective_bytes_bf16=b16,
+                                coll_by_type={base_op: float(b)},
+                                coll_count=1)
+                if top_level:
+                    total += OpCost(bytes=b + operand_bytes(rest))
+                continue
+            # --- compute ops
+            elems, rbytes = _shape_elems_bytes(result_shape)
+            if opcode in ("dot", "dot-general"):
+                total += OpCost(flops=_dot_flops(result_shape, line, defs))
+            elif opcode == "convolution":
+                total += OpCost(flops=4.0 * elems)  # rough; convs are stubs
+            elif opcode in _ELEMENTWISE1:
+                total += OpCost(flops=float(elems))
+            elif opcode in _ELEMENTWISE4:
+                total += OpCost(flops=4.0 * elems,
+                                transcendental=float(elems))
+            if top_level and opcode in _HEAVY:
+                if opcode in _SLICE_WRITE:
+                    b = 2 * sum(x for x in _operand_sizes(rest)
+                                if x < rbytes)
+                elif opcode in _SLICE_READ:
+                    b = 2 * rbytes
+                else:
+                    b = rbytes + operand_bytes(rest)
+                total += OpCost(bytes=b,
+                                scope_bytes=b if SCOPE_RE.search(line)
+                                else 0.0)
+        memo[key] = total
+        return total
+
+    return comp_cost(entry, True)
+
+
+def _trip_count(comps: Dict[str, Computation], cond_name: str) -> float:
+    comp = comps.get(cond_name)
+    if comp is None:
+        return 1.0
+    consts = []
+    for line in comp.lines:
+        for m in re.finditer(r"constant\((\d+)\)", line):
+            consts.append(int(m.group(1)))
+    # canonical pattern: compare(induction, constant(N), LT) -> N trips
+    if consts:
+        return float(max(consts))
+    return 1.0
+
+
+def top_collectives(hlo: str, n: int = 12):
+    """Largest collective ops with their while-trip multipliers — the
+    §Perf debugging view ('which all-reduce is eating the step?')."""
+    comps = parse_computations(hlo)
+    trips: Dict[str, float] = {}
+    for cname, comp in comps.items():
+        for line in comp.lines:
+            if " while(" in line:
+                b = re.search(r"body=%?([\w.\-]+)", line)
+                mt = re.search(r'known_trip_count[^0-9]*(\d+)', line)
+                if b:
+                    trips[b.group(1)] = float(mt.group(1)) if mt else 1.0
+    rows = []
+    for cname, comp in comps.items():
+        mult = trips.get(cname, 1.0)
+        for line in comp.lines:
+            m = _OP_RE.match(line)
+            if not m:
+                continue
+            opcode = m.group(3)
+            base = opcode[:-6] if opcode.endswith("-start") else opcode
+            if base not in _COLLECTIVES:
+                continue
+            _, b = _shape_elems_bytes(m.group(2))
+            meta = re.search(r'op_name="([^"]*)"', line)
+            rows.append((b * mult, base, mult, m.group(2)[:48],
+                         (meta.group(1) if meta else "")[:90]))
+    rows.sort(reverse=True)
+    return rows[:n]

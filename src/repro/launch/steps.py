@@ -1,0 +1,123 @@
+"""jit-compiled train / serve steps with full sharding annotations."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ArchSpec, SHAPES
+from repro.models import api
+from repro.optim import OptConfig, opt_init, opt_step
+from . import mesh as M
+
+
+def shardings_for(spec: ArchSpec, mesh, opt_cfg: Optional[OptConfig]):
+    """(param, opt) NamedSharding trees from eval_shape (no allocation)."""
+    pshapes = api.param_shapes(spec)
+    psh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                       M.spec_tree(pshapes, mesh, M.param_spec))
+    osh = None
+    if opt_cfg is not None:
+        oshapes = jax.eval_shape(lambda p: opt_init(p, opt_cfg), pshapes)
+        osh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                           M.spec_tree(oshapes, mesh, M.opt_spec))
+    return psh, osh
+
+
+def build_train_step(spec: ArchSpec, mesh, opt_cfg: OptConfig,
+                     donate: bool = True, profile: str = "tp",
+                     shard_grads: bool = True, accum: int = 1):
+    """Returns (jitted step, (param_sh, opt_sh)) for one architecture.
+
+    ``shard_grads``: pin each gradient to its parameter's sharding right
+    at the autodiff output, steering SPMD toward reduce-scatter (grads
+    arrive sharded) instead of full all-reduce + slice.
+
+    ``accum``: gradient-accumulation microbatches — the global batch is
+    split along its leading axis and processed by a ``lax.scan``, so
+    per-step activation memory scales ~1/accum (the standard fits-HBM
+    lever for the largest train cells; EXPERIMENTS.md §Dry-run).
+    """
+    constrain = M.make_constrain(mesh, profile)
+    psh, osh = shardings_for(spec, mesh, opt_cfg)
+
+    def loss_fn(p, b):
+        return api.apply_train(p, spec, b, constrain=constrain)
+
+    def train_step(params, opt_state, batch):
+        if accum == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda a: a.reshape((accum, a.shape[0] // accum)
+                                    + a.shape[1:]), batch)
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def mb(acc, b):
+                l, g = jax.value_and_grad(loss_fn)(params, b)
+                acc = jax.tree.map(
+                    lambda a, gi: a + gi.astype(jnp.float32) / accum,
+                    acc, g)
+                return acc, l
+
+            grads, losses = jax.lax.scan(mb, zeros, micro)
+            loss = losses.mean()
+        if shard_grads:
+            grads = jax.tree.map(jax.lax.with_sharding_constraint,
+                                 grads, psh)
+        params, opt_state, stats = opt_step(params, opt_state, grads,
+                                            opt_cfg)
+        stats["loss"] = loss
+        return params, opt_state, stats
+
+    def batch_sh(shapes):
+        return jax.tree.map(
+            lambda s: NamedSharding(mesh, P(*M.batch_spec("", s.shape, mesh))),
+            shapes)
+
+    def jit_for(batch_shapes):
+        return jax.jit(
+            train_step,
+            in_shardings=(psh, osh, batch_sh(batch_shapes)),
+            out_shardings=(psh, osh, None),
+            donate_argnums=(0, 1) if donate else ())
+
+    return train_step, jit_for, (psh, osh)
+
+
+def build_serve_step(spec: ArchSpec, mesh, donate: bool = True,
+                     profile: str = "tp"):
+    """One-token decode step builder; state sharded per decode rules."""
+    constrain = M.make_constrain(mesh, profile)
+    psh, _ = shardings_for(spec, mesh, None)
+
+    def serve_step(params, state, tokens, cache_index):
+        logits, new_state = api.apply_decode(params, spec, tokens, state,
+                                             cache_index,
+                                             constrain=constrain)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok, new_state
+
+    def state_sh(state_shapes):
+        return jax.tree.map(lambda s: NamedSharding(
+            mesh, P()), state_shapes) if mesh is None else \
+            jax.tree.map(lambda s: NamedSharding(mesh, s),
+                         M.spec_tree(state_shapes, mesh,
+                                     M.decode_state_spec))
+
+    def jit_for(state_shapes, token_shape):
+        ssh = state_sh(state_shapes)
+        tsh = NamedSharding(mesh, P(*M.batch_spec("", token_shape.shape,
+                                                  mesh)))
+        return jax.jit(
+            serve_step,
+            in_shardings=(psh, ssh, tsh, None),
+            out_shardings=(None, ssh),
+            donate_argnums=(1,) if donate else (),
+            static_argnums=()), ssh
+
+    return serve_step, jit_for, psh

@@ -1,0 +1,4 @@
+from . import api, encdec, hybrid, layers, mamba2, moe, transformer, vlm
+
+__all__ = ["api", "encdec", "hybrid", "layers", "mamba2", "moe",
+           "transformer", "vlm"]

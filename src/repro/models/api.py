@@ -1,0 +1,164 @@
+"""Family-dispatched model API: one entry point for all architectures.
+
+``init / apply_train / apply_decode / decode_state / input_specs`` work
+for every assigned arch; the launcher and dry-run only talk to this
+module.  Decode state = KV caches (attention), SSD+conv states (ssm),
+or both (hybrid); enc-dec also carries precomputed cross K/V.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchSpec, SHAPES
+from . import encdec, hybrid, layers as L, mamba2, transformer, vlm
+
+
+# ------------------------------------------------------------------ init
+def init(key, spec: ArchSpec):
+    fam = spec.family
+    if fam in ("dense", "moe"):
+        return transformer.init(key, spec.cfg)
+    if fam == "ssm":
+        return mamba2.init(key, spec.cfg)
+    if fam == "hybrid":
+        return hybrid.init(key, spec.cfg)
+    if fam == "audio":
+        return encdec.init(key, spec.cfg)
+    if fam == "vlm":
+        return vlm.init(key, spec.cfg)
+    raise ValueError(fam)
+
+
+def param_shapes(spec: ArchSpec):
+    """Parameter tree as ShapeDtypeStructs (no allocation) for dry-runs."""
+    return jax.eval_shape(lambda k: init(k, spec),
+                          jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+# --------------------------------------------------------------- training
+def apply_train(params, spec: ArchSpec, batch: Dict[str, jnp.ndarray],
+                constrain=lambda t, *a: t) -> jnp.ndarray:
+    """Returns token-mean loss for one batch."""
+    fam = spec.family
+    tokens, labels = batch["tokens"], batch["labels"]
+    if fam in ("dense", "moe"):
+        return transformer.loss(params, spec.cfg, tokens, labels,
+                                constrain=constrain)
+    elif fam == "ssm":
+        logits = mamba2.forward(params, spec.cfg, tokens,
+                                constrain=constrain)
+    elif fam == "hybrid":
+        logits = hybrid.forward(params, spec.cfg, tokens,
+                                constrain=constrain)
+    elif fam == "audio":
+        logits = encdec.forward(params, spec.cfg, batch["frames"], tokens,
+                                constrain=constrain)
+    elif fam == "vlm":
+        prefix = batch["patches"].astype(L.COMPUTE_DTYPE) @ \
+            params["vision_proj"]
+        return transformer.loss(params, spec.cfg.lm, tokens, labels,
+                                constrain=constrain, prefix_embed=prefix,
+                                prefix_drop=spec.cfg.n_patches)
+    else:
+        raise ValueError(fam)
+    return L.softmax_xent(logits, labels)
+
+
+# ---------------------------------------------------------------- decode
+def decode_state(spec: ArchSpec, batch: int, max_seq: int):
+    """Allocatable decode-state pytree for ``serve_step``."""
+    fam = spec.family
+    if fam in ("dense", "moe", "vlm"):
+        cfg = spec.cfg.lm if fam == "vlm" else spec.cfg
+        kd = (cfg.n_layers, batch, max_seq, cfg.n_kv, cfg.dh)
+        return {"kv": (jnp.zeros(kd, L.COMPUTE_DTYPE),
+                       jnp.zeros(kd, L.COMPUTE_DTYPE))}
+    if fam == "ssm":
+        return {"ssm": mamba2.init_decode_state(spec.cfg, batch)}
+    if fam == "hybrid":
+        m, kv = hybrid.init_decode_state(spec.cfg, batch, max_seq)
+        return {"ssm": m, "kv": kv}
+    if fam == "audio":
+        cfg = spec.cfg
+        dh = cfg.d_model // cfg.n_heads
+        kd = (cfg.n_layers, batch, max_seq, cfg.n_kv, dh)
+        xd = (cfg.n_layers, batch, cfg.enc_len, cfg.n_kv, dh)
+        return {"kv": (jnp.zeros(kd, L.COMPUTE_DTYPE),
+                       jnp.zeros(kd, L.COMPUTE_DTYPE)),
+                "cross": (jnp.zeros(xd, L.COMPUTE_DTYPE),
+                          jnp.zeros(xd, L.COMPUTE_DTYPE))}
+    raise ValueError(fam)
+
+
+def apply_decode(params, spec: ArchSpec, tokens, state,
+                 cache_index, constrain=lambda t, *a: t):
+    """One decode step: tokens (B, 1) -> (logits (B, 1, V), new state)."""
+    fam = spec.family
+    if fam in ("dense", "moe"):
+        logits, kv = transformer.forward(
+            params, spec.cfg, tokens, kv_caches=state["kv"],
+            cache_index=cache_index, constrain=constrain)
+        return logits, {"kv": kv}
+    if fam == "vlm":
+        logits, kv = vlm.forward(
+            params, spec.cfg, tokens, None, kv_caches=state["kv"],
+            cache_index=cache_index, constrain=constrain)
+        return logits, {"kv": kv}
+    if fam == "ssm":
+        logits, st = mamba2.forward(params, spec.cfg, tokens,
+                                    states=state["ssm"],
+                                    constrain=constrain)
+        return logits, {"ssm": st}
+    if fam == "hybrid":
+        logits, st, kv = hybrid.forward(
+            params, spec.cfg, tokens, states=state["ssm"],
+            kv_caches=state["kv"], cache_index=cache_index,
+            constrain=constrain)
+        return logits, {"ssm": st, "kv": kv}
+    if fam == "audio":
+        logits, kv = encdec.decode(
+            params, spec.cfg, tokens, cross=state["cross"],
+            kv_caches=state["kv"], cache_index=cache_index,
+            constrain=constrain)
+        return logits, {"kv": kv, "cross": state["cross"]}
+    raise ValueError(fam)
+
+
+# ------------------------------------------------------------ input specs
+def input_specs(spec: ArchSpec, shape_name: str) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of one cell."""
+    seq, batch, kind = SHAPES[shape_name]
+    f32, i32 = jnp.float32, jnp.int32
+    sd = jax.ShapeDtypeStruct
+    fam = spec.family
+    if kind == "train":
+        text = seq
+        out = {"tokens": sd((batch, text), i32),
+               "labels": sd((batch, text), i32)}
+        if fam == "vlm":
+            out["tokens"] = sd((batch, seq - spec.cfg.n_patches), i32)
+            out["labels"] = sd((batch, seq - spec.cfg.n_patches), i32)
+            out["patches"] = sd((batch, spec.cfg.n_patches,
+                                 spec.cfg.d_vision), f32)
+        if fam == "audio":
+            out["frames"] = sd((batch, spec.cfg.enc_len,
+                                spec.cfg.d_model), f32)
+        return out
+    if kind == "prefill":
+        out = {"tokens": sd((batch, seq), i32),
+               "labels": sd((batch, seq), i32)}
+        if fam == "vlm":
+            out["tokens"] = sd((batch, seq - spec.cfg.n_patches), i32)
+            out["labels"] = sd((batch, seq - spec.cfg.n_patches), i32)
+            out["patches"] = sd((batch, spec.cfg.n_patches,
+                                 spec.cfg.d_vision), f32)
+        if fam == "audio":
+            out["frames"] = sd((batch, spec.cfg.enc_len,
+                                spec.cfg.d_model), f32)
+        return out
+    # decode: one new token against a seq-length KV/state
+    return {"tokens": sd((batch, 1), i32)}

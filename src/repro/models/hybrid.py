@@ -1,0 +1,151 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one SHARED attention block
+applied every ``attn_every`` layers (arXiv:2411.15242).
+
+The shared block's parameters are reused at every application point (the
+Zamba trick that keeps param count low); each application point owns its
+own KV cache.  Layers are scanned in groups so the shared block sits
+between group scans — HLO stays small (one scan body + one attn body).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from . import mamba2 as M
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    vocab: int
+    n_heads: int
+    n_kv: int
+    d_ff: int
+    d_state: int = 64
+    head_dim: int = 64
+    attn_every: int = 6
+    remat: str = "dots"
+
+    @property
+    def mamba(self) -> M.Mamba2Config:
+        return M.Mamba2Config(
+            name=self.name + "-mamba", n_layers=self.n_layers,
+            d_model=self.d_model, vocab=self.vocab, d_state=self.d_state,
+            head_dim=self.head_dim, remat=self.remat)
+
+    @property
+    def attn(self) -> L.AttnConfig:
+        return L.AttnConfig(self.d_model, self.n_heads, self.n_kv,
+                            self.d_model // self.n_heads)
+
+    @property
+    def n_apps(self) -> int:
+        return -(-self.n_layers // self.attn_every)
+
+    def param_count(self) -> int:
+        m = self.mamba.param_count()
+        D, dh = self.d_model, self.d_model // self.n_heads
+        shared = (D * self.n_heads * dh + 2 * D * self.n_kv * dh +
+                  self.n_heads * dh * D + 3 * D * self.d_ff + 2 * D)
+        return m + shared
+
+    def active_param_count(self) -> int:
+        return self.param_count()
+
+
+def init(key, cfg: HybridConfig):
+    km, ka, kf = jax.random.split(key, 3)
+    p = M.init(km, cfg.mamba)
+    p["shared"] = {
+        "ln1": L.rmsnorm_init(cfg.d_model),
+        "ln2": L.rmsnorm_init(cfg.d_model),
+        "attn": L.attn_init(ka, cfg.attn),
+        "ffn": L.ffn_init(kf, cfg.d_model, cfg.d_ff),
+    }
+    return p
+
+
+def _shared_block(sp, cfg: HybridConfig, x, positions, kv_cache=None,
+                  cache_index=None, constrain=lambda t, *a: t):
+    h, new_cache = L.attn_apply(sp["attn"], cfg.attn,
+                                L.rmsnorm(sp["ln1"], x), positions,
+                                kv_cache=kv_cache, cache_index=cache_index,
+                                constrain=constrain)
+    x = x + h
+    x = x + L.ffn_apply(sp["ffn"], L.rmsnorm(sp["ln2"], x), constrain)
+    return x, new_cache
+
+
+def forward(params, cfg: HybridConfig, tokens, *, states=None,
+            kv_caches=None, cache_index=None, constrain=lambda t, *a: t):
+    """Grouped scan: [shared-attn, 6x mamba] x n_apps.
+
+    ``states``: stacked mamba decode state or None; ``kv_caches``:
+    (k, v) each (n_apps, B, T, K, dh) or None.
+    """
+    mcfg = cfg.mamba
+    x = L.embed_apply(params["embed"], tokens)
+    x = constrain(x, "act_resid")
+    B, S, _ = x.shape
+    start = 0 if cache_index is None else cache_index
+    positions = jnp.broadcast_to(
+        start + jnp.arange(S, dtype=jnp.int32)[None, :], (B, S))
+
+    def mamba_body(x, lp_and_state):
+        if states is None:
+            out, _ = M.block_apply(lp_and_state, mcfg, x,
+                                   constrain=constrain)
+            return x + out, None
+        lp, st = lp_and_state
+        out, new_st = M.block_apply(lp, mcfg, x, state=st,
+                                    constrain=constrain)
+        return x + out, new_st
+
+    body = mamba_body
+    if cfg.remat == "dots" and states is None:
+        body = jax.checkpoint(
+            mamba_body,
+            policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+
+    take = lambda tree, lo, hi: jax.tree.map(lambda a: a[lo:hi], tree)
+    new_states, new_k, new_v = [], [], []
+    for app in range(cfg.n_apps):
+        lo = app * cfg.attn_every
+        hi = min(cfg.n_layers, lo + cfg.attn_every)
+        cache = None if kv_caches is None else \
+            (kv_caches[0][app], kv_caches[1][app])
+        x, nc = _shared_block(params["shared"], cfg, x, positions,
+                              kv_cache=cache, cache_index=cache_index,
+                              constrain=constrain)
+        if nc is not None:
+            new_k.append(nc[0])
+            new_v.append(nc[1])
+        xs = take(params["layers"], lo, hi) if states is None else \
+            (take(params["layers"], lo, hi), take(states, lo, hi))
+        x, ns = jax.lax.scan(body, x, xs)
+        if ns is not None:
+            new_states.append(ns)
+    x = L.rmsnorm(params["final_norm"], x)
+    logits = L.unembed_apply(params["embed"], x)
+    outs = [logits]
+    if states is not None:
+        outs.append(jax.tree.map(lambda *xs: jnp.concatenate(xs, 0),
+                                 *new_states))
+    if kv_caches is not None:
+        outs.append((jnp.stack(new_k), jnp.stack(new_v)))
+    return outs[0] if len(outs) == 1 else tuple(outs)
+
+
+def init_decode_state(cfg: HybridConfig, batch: int, max_seq: int):
+    mstate = M.init_decode_state(cfg.mamba, batch)
+    dh = cfg.d_model // cfg.n_heads
+    kv = (jnp.zeros((cfg.n_apps, batch, max_seq, cfg.n_kv, dh),
+                    L.COMPUTE_DTYPE),
+          jnp.zeros((cfg.n_apps, batch, max_seq, cfg.n_kv, dh),
+                    L.COMPUTE_DTYPE))
+    return mstate, kv

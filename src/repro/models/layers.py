@@ -1,0 +1,288 @@
+"""Shared neural-net layers (pure JAX, shard-aware).
+
+Conventions
+-----------
+* params are plain pytrees of jnp arrays; layer-stacked weights carry a
+  leading ``L`` axis and are consumed by ``lax.scan``;
+* compute dtype is bf16, accumulation fp32, params stored bf16 (master
+  fp32 copies live in the optimizer state);
+* activation sharding is requested with
+  :func:`repro.launch.mesh.constrain` (no-op off-mesh).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+COMPUTE_DTYPE = jnp.bfloat16
+PARAM_DTYPE = jnp.bfloat16
+
+
+def _he(key, shape, scale=1.0, dtype=PARAM_DTYPE):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    return (jax.random.normal(key, shape, jnp.float32) *
+            np.sqrt(scale / fan_in)).astype(dtype)
+
+
+# ----------------------------------------------------------------- norms
+def rmsnorm_init(d: int):
+    return jnp.ones((d,), PARAM_DTYPE)
+
+
+def rmsnorm(g, x, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    rms = jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return (x32 * rms).astype(x.dtype) * g
+
+
+# ------------------------------------------------------------------ rope
+def rope_freqs(dh: int, theta: float = 10000.0) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, dh, 2, jnp.float32) / dh))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float = 10000.0) -> jnp.ndarray:
+    """x: (..., S, H, dh); positions: (..., S)."""
+    dh = x.shape[-1]
+    inv = rope_freqs(dh, theta)                       # (dh/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * inv  # (..., S, dh/2)
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------- attention
+def causal_attention(q, k, v, *, scale: Optional[float] = None,
+                     causal: bool = True,
+                     kv_len: Optional[jnp.ndarray] = None,
+                     q_offset: Optional[jnp.ndarray] = None,
+                     softmax_dtype: str = "f32"):
+    """Reference attention.  q: (B,S,H,dh)  k/v: (B,T,K,dh) with H % K == 0.
+
+    ``kv_len``: optional (B,) active KV length for decode (masks the tail).
+    ``q_offset``: scalar position of q[0] within the KV timeline — decode
+    and chunked prefill use it for within-chunk causality.
+    """
+    B, S, H, dh = q.shape
+    T, K = k.shape[1], k.shape[2]
+    scale = scale if scale is not None else dh ** -0.5
+    rep = H // K
+    bf16 = softmax_dtype == "bf16"
+    cdt = jnp.bfloat16 if bf16 else jnp.float32
+    scope = jax.named_scope("flashable_attn")
+    scope.__enter__()
+    neg = jnp.asarray(-3e4 if bf16 else -1e30, cdt)
+    qg = q.reshape(B, S, K, rep, dh)
+    logits = jnp.einsum("bskrd,btkd->bkrst", qg.astype(cdt),
+                        k.astype(cdt),
+                        preferred_element_type=cdt) * jnp.asarray(scale, cdt)
+    if causal and S == T and q_offset is None:
+        mask = jnp.tril(jnp.ones((S, T), bool))
+        logits = jnp.where(mask[None, None, None], logits, neg)
+    if q_offset is not None:
+        qpos = q_offset + jnp.arange(S)
+        mask = qpos[:, None] >= jnp.arange(T)[None, :]   # (S, T)
+        logits = jnp.where(mask[None, None, None], logits, neg)
+    if kv_len is not None:
+        valid = jnp.arange(T)[None] < kv_len[:, None]      # (B,T)
+        logits = jnp.where(valid[:, None, None, None], logits, neg)
+    if bf16:
+        # bf16 buffers, fp32 row statistics (max/sum) only
+        m = jax.lax.stop_gradient(logits.max(-1, keepdims=True))
+        e = jnp.exp((logits - m))                      # bf16
+        s = e.astype(jnp.float32).sum(-1, keepdims=True)
+        p = (e.astype(jnp.float32) / s).astype(jnp.bfloat16)
+    else:
+        p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkrst,btkd->bskrd", p, v.astype(p.dtype),
+                     preferred_element_type=jnp.float32)
+    scope.__exit__(None, None, None)
+    return out.reshape(B, S, H, dh).astype(q.dtype)
+
+
+def chunked_attention(q, k, v, *, causal: bool = True, q_chunk: int = 512,
+                      kv_len=None):
+    """Memory-efficient attention: q processed in chunks, logits never
+    materialized at (S, S) — the flash-attention schedule expressed in
+    XLA-fusable JAX (the Pallas kernel in repro.kernels is the TPU-native
+    twin; this path is what the dry-run lowers).  Each chunk is
+    rematerialized in the backward pass (jax.checkpoint), so train-time
+    activation memory drops from O(S^2) to O(S * q_chunk / S) per head.
+    """
+    B, S, H, dh = q.shape
+    T, K = k.shape[1], k.shape[2]
+    rep = H // K
+    scale = dh ** -0.5
+    q_chunk = min(q_chunk, S)
+    assert S % q_chunk == 0
+    nq = S // q_chunk
+    qg = q.reshape(B, nq, q_chunk, K, rep, dh).transpose(1, 0, 2, 3, 4, 5)
+
+    @functools.partial(jax.checkpoint, policy=None)
+    def one_chunk(args):
+        qc, qpos0 = args                       # (B, C, K, rep, dh)
+        logits = jnp.einsum("bckrd,btkd->bkrct", qc.astype(jnp.float32),
+                            k.astype(jnp.float32)) * scale
+        if causal:
+            qi = qpos0 + jnp.arange(q_chunk)
+            mask = qi[:, None] >= jnp.arange(T)[None, :]
+            logits = jnp.where(mask[None, None, None], logits, -1e30)
+        if kv_len is not None:
+            valid = jnp.arange(T)[None] < kv_len[:, None]
+            logits = jnp.where(valid[:, None, None, None, :], logits, -1e30)
+        p = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bkrct,btkd->bckrd", p, v.astype(jnp.float32))
+        return out.astype(q.dtype)
+
+    starts = jnp.arange(nq) * q_chunk
+    outs = jax.lax.map(one_chunk, (qg, starts))     # (nq, B, C, K, rep, dh)
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, S, H, dh)
+    return out
+
+
+# -------------------------------------------------------------- attention block
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv: int
+    head_dim: int
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    impl: str = "reference"    # "reference" | "chunked" (beyond-paper)
+    q_chunk: int = 512
+    softmax_dtype: str = "f32"  # "f32" | "bf16" (beyond-paper)
+
+
+def attn_init(key, cfg: AttnConfig):
+    kq, kk, kv, ko, n1, n2 = jax.random.split(key, 6)
+    D, H, K, dh = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.head_dim
+    p = {
+        "wq": _he(kq, (D, H * dh)),
+        "wk": _he(kk, (D, K * dh)),
+        "wv": _he(kv, (D, K * dh)),
+        "wo": _he(ko, (H * dh, D)),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(dh)
+        p["k_norm"] = rmsnorm_init(dh)
+    return p
+
+
+def attn_apply(p, cfg: AttnConfig, x, positions, *, kv_cache=None,
+               cache_index=None, constrain=lambda t, *a: t):
+    """Returns (out, new_kv_cache).  kv_cache: (k,v) each (B,T,K,dh)."""
+    B, S, D = x.shape
+    H, K, dh = cfg.n_heads, cfg.n_kv, cfg.head_dim
+    wq = constrain(p["wq"], "param:attn/wq")
+    wk = constrain(p["wk"], "param:attn/wk")
+    wv = constrain(p["wv"], "param:attn/wv")
+    wo = constrain(p["wo"], "param:attn/wo")
+    q = (x @ wq).reshape(B, S, H, dh)
+    k = (x @ wk).reshape(B, S, K, dh)
+    v = (x @ wv).reshape(B, S, K, dh)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q)
+        k = rmsnorm(p["k_norm"], k)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = constrain(q, "act_heads")
+    k = constrain(k, "act_kv")
+    if kv_cache is None:
+        if cfg.impl == "chunked":
+            out = chunked_attention(q, k, v, causal=True,
+                                    q_chunk=cfg.q_chunk)
+        else:
+            out = causal_attention(q, k, v,
+                                   softmax_dtype=cfg.softmax_dtype)
+        new_cache = None
+    else:
+        ck, cv = kv_cache
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, k, cache_index, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, v, cache_index, axis=1)
+        # position-based mask: causal within the new chunk AND only the
+        # first cache_index + S cache entries are live (prefill: S >> 1)
+        out = causal_attention(q, ck, cv, causal=False,
+                               q_offset=cache_index)
+        new_cache = (ck, cv)
+    out = out.reshape(B, S, H * dh) @ wo
+    return constrain(out, "act_resid"), new_cache
+
+
+# ------------------------------------------------------------------- ffn
+def ffn_init(key, d: int, f: int):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"wi": _he(k1, (d, f)), "wg": _he(k2, (d, f)),
+            "wo": _he(k3, (f, d))}
+
+
+def ffn_apply(p, x, constrain=lambda t, *a: t):
+    wi = constrain(p["wi"], "param:ffn/wi")
+    wg = constrain(p["wg"], "param:ffn/wg")
+    wo = constrain(p["wo"], "param:ffn/wo")
+    h = jax.nn.silu(x @ wg) * (x @ wi)
+    h = constrain(h, "act_ffn")
+    return constrain(h @ wo, "act_resid")
+
+
+# ------------------------------------------------------------- embedding
+def embed_init(key, vocab: int, d: int):
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02) \
+        .astype(PARAM_DTYPE)
+
+
+def embed_apply(table, tokens):
+    return jnp.take(table, tokens, axis=0).astype(COMPUTE_DTYPE)
+
+
+def unembed_apply(table, x):
+    """Tied unembedding: logits in fp32 for a stable softmax."""
+    return jnp.einsum("bsd,vd->bsv", x.astype(jnp.float32),
+                      table.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------- losses
+def softmax_xent_chunked(head, x, labels, *, chunk: int = 512,
+                         z_loss: float = 1e-4):
+    """Cross-entropy without materializing (B, S, V) logits: sequence
+    chunks are projected, reduced, and rematerialized in backward.
+    The big-vocab analogue of flash attention (beyond-paper, §Perf)."""
+    B, S, D = x.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    nc = S // chunk
+    xc = x.reshape(B, nc, chunk, D).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, nc, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def one(args):
+        xi, li = args
+        logits = jnp.einsum("bsd,vd->bsv", xi.astype(jnp.float32),
+                            head.astype(jnp.float32))
+        mask = li >= 0
+        li = jnp.maximum(li, 0)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, li[..., None], -1)[..., 0]
+        nll = lse - gold + z_loss * lse ** 2
+        return (nll * mask).sum(), mask.sum()
+
+    nlls, counts = jax.lax.map(one, (xc, lc))
+    return nlls.sum() / jnp.maximum(counts.sum(), 1)
+
+
+def softmax_xent(logits, labels, *, z_loss: float = 1e-4):
+    """Cross-entropy with z-loss; labels < 0 are padding."""
+    mask = labels >= 0
+    labels = jnp.maximum(labels, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], -1)[..., 0]
+    nll = lse - gold + z_loss * lse ** 2
+    denom = jnp.maximum(mask.sum(), 1)
+    return (nll * mask).sum() / denom

@@ -1,0 +1,226 @@
+"""Mamba2 — state-space duality (SSD) blocks (arXiv:2405.21060).
+
+The SSD layer computes, per head, ``y_t = C_t^T h_t`` with
+``h_t = a_t h_{t-1} + b_t x_t^T`` (scalar-per-head decay ``a_t``).  The
+chunked algorithm splits the sequence into Q-length chunks: a quadratic
+intra-chunk term (MXU-friendly — this is the "duality" with attention)
+plus an inter-chunk state carried by ``lax.scan`` (O(S) total).
+
+Decode carries a constant-size state (heads, dh, dstate) — a 500k-token
+context costs the same per step as a 4k one, which is exactly why the
+``long_500k`` cell is runnable for this family and skipped for the pure
+attention archs (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .layers import _he
+
+
+@dataclasses.dataclass(frozen=True)
+class Mamba2Config:
+    name: str
+    n_layers: int
+    d_model: int
+    vocab: int
+    d_state: int = 128
+    head_dim: int = 64
+    expand: int = 2
+    n_groups: int = 1
+    conv_width: int = 4
+    chunk: int = 256
+    remat: str = "dots"
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+    def param_count(self) -> int:
+        D, DI = self.d_model, self.d_inner
+        G, N, H = self.n_groups, self.d_state, self.n_heads
+        in_proj = D * (2 * DI + 2 * G * N + H)
+        conv = self.conv_width * (DI + 2 * G * N)
+        per_layer = in_proj + conv + H * 2 + DI + DI * D + 2 * D
+        return self.n_layers * per_layer + self.vocab * D + D
+
+    def active_param_count(self) -> int:
+        return self.param_count()
+
+
+def init_layer(key, cfg: Mamba2Config):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    D, DI, G, N, H = (cfg.d_model, cfg.d_inner, cfg.n_groups, cfg.d_state,
+                      cfg.n_heads)
+    return {
+        "ln": L.rmsnorm_init(D),
+        "in_proj": _he(k1, (D, 2 * DI + 2 * G * N + H)),
+        "conv_w": _he(k2, (cfg.conv_width, DI + 2 * G * N)),
+        "A_log": jnp.zeros((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "D_skip": jnp.ones((H,), jnp.float32),
+        "gate_norm": L.rmsnorm_init(DI),
+        "out_proj": _he(k3, (DI, D)),
+    }
+
+
+def init(key, cfg: Mamba2Config):
+    ke, kl = jax.random.split(key)
+    stacked = jax.vmap(lambda k: init_layer(k, cfg))(
+        jax.random.split(kl, cfg.n_layers))
+    return {
+        "embed": L.embed_init(ke, cfg.vocab, cfg.d_model),
+        "layers": stacked,
+        "final_norm": L.rmsnorm_init(cfg.d_model),
+    }
+
+
+def _segsum(log_a):
+    """(..., Q) -> (..., Q, Q) lower-triangular cumulative log-decay."""
+    Q = log_a.shape[-1]
+    cs = jnp.cumsum(log_a, -1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, cfg: Mamba2Config, h0=None):
+    """SSD scan.  x: (Bt, S, H, P)  dt: (Bt, S, H)  B/C: (Bt, S, G, N).
+
+    Returns (y, h_final) with y: (Bt, S, H, P), h: (Bt, H, P, N).
+    """
+    Bt, S, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    Q = min(cfg.chunk, S)
+    nc = S // Q
+    rep = H // G
+    xc = x.reshape(Bt, nc, Q, H, P)
+    dtc = dt.reshape(Bt, nc, Q, H)
+    Bc = jnp.repeat(B.reshape(Bt, nc, Q, G, N), rep, axis=3)
+    Cc = jnp.repeat(C.reshape(Bt, nc, Q, G, N), rep, axis=3)
+    log_a = (-jnp.exp(A))[None, None, None, :] * dtc     # (Bt,nc,Q,H) <= 0
+    xdt = xc * dtc[..., None]
+
+    # intra-chunk (quadratic, attention-like)
+    LSS = _segsum(log_a.transpose(0, 1, 3, 2))           # (Bt,nc,H,Q,Q)
+    CB = jnp.einsum("bcqhn,bckhn->bchqk", Cc.astype(jnp.float32),
+                    Bc.astype(jnp.float32))
+    y_intra = jnp.einsum("bchqk,bckhp->bcqhp",
+                         CB * jnp.exp(LSS), xdt.astype(jnp.float32))
+
+    # chunk-final states: sum_k exp(sum_{j>k} log_a) * B_k x_k
+    csum = jnp.cumsum(log_a, axis=2)
+    tail = csum[:, :, -1:, :] - csum                     # (Bt,nc,Q,H)
+    states = jnp.einsum("bcqhn,bcqhp->bchpn",
+                        (Bc * jnp.exp(tail)[..., None]).astype(jnp.float32),
+                        xdt.astype(jnp.float32))         # (Bt,nc,H,P,N)
+
+    # inter-chunk scan
+    chunk_decay = jnp.exp(csum[:, :, -1, :])             # (Bt,nc,H)
+    if h0 is None:
+        h0 = jnp.zeros((Bt, H, P, N), jnp.float32)
+
+    def scan_fn(h, inp):
+        st, dec = inp
+        h_new = h * dec[..., None, None] + st
+        return h_new, h
+
+    (h_final, h_prevs) = jax.lax.scan(
+        scan_fn, h0, (states.transpose(1, 0, 2, 3, 4),
+                      chunk_decay.transpose(1, 0, 2)))
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)           # (Bt,nc,H,P,N)
+
+    # inter-chunk output: C_t · (decay-to-t · h_prev)
+    y_inter = jnp.einsum("bcqhn,bchpn->bcqhp",
+                         (Cc * jnp.exp(csum)[..., None]).astype(jnp.float32),
+                         h_prevs)
+    y = (y_intra + y_inter).reshape(Bt, S, H, P)
+    return y.astype(x.dtype), h_final
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv.  x: (B, S, C), w: (K, C).
+
+    Returns (y, new_state) where state is the trailing K-1 inputs.
+    """
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i][None, None] for i in range(K))
+    return jax.nn.silu(y), xp[:, -(K - 1):]
+
+
+def block_apply(lp, cfg: Mamba2Config, x, *, state=None,
+                constrain=lambda t, *a: t):
+    """One Mamba2 block.  state: None (train) or dict(conv, ssm)."""
+    Bt, S, D = x.shape
+    DI, G, N, H, P = (cfg.d_inner, cfg.n_groups, cfg.d_state, cfg.n_heads,
+                      cfg.head_dim)
+    xn = L.rmsnorm(lp["ln"], x)
+    zxbcdt = xn @ lp["in_proj"]
+    z, xbc, dt = jnp.split(zxbcdt, [DI, 2 * DI + 2 * G * N], axis=-1)
+    conv_state = None if state is None else state["conv"]
+    xbc, new_conv = _causal_conv(xbc, lp["conv_w"], conv_state)
+    xs, B_, C_ = jnp.split(xbc, [DI, DI + G * N], axis=-1)
+    xs = constrain(xs, "act_ffn")
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + lp["dt_bias"])
+    xh = xs.reshape(Bt, S, H, P)
+    B_ = B_.reshape(Bt, S, G, N)
+    C_ = C_.reshape(Bt, S, G, N)
+    h0 = None if state is None else state["ssm"]
+    y, h_final = ssd_chunked(xh, dt, lp["A_log"], B_, C_, cfg, h0=h0)
+    y = y + xh * lp["D_skip"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(Bt, S, DI)
+    y = L.rmsnorm(lp["gate_norm"], y) * jax.nn.silu(z)
+    out = y @ lp["out_proj"]
+    new_state = None if state is None else \
+        {"conv": new_conv, "ssm": h_final}
+    return constrain(out, "act_resid"), new_state
+
+
+def forward(params, cfg: Mamba2Config, tokens, *, states=None,
+            constrain=lambda t, *a: t):
+    """states: None (train) or stacked per-layer dict for decode."""
+    x = L.embed_apply(params["embed"], tokens)
+    x = constrain(x, "act_resid")
+
+    def body(x, lp_and_state):
+        if states is None:
+            lp = lp_and_state
+            out, _ = block_apply(lp, cfg, x, constrain=constrain)
+            return x + out, None
+        lp, st = lp_and_state
+        out, new_st = block_apply(lp, cfg, x, state=st, constrain=constrain)
+        return x + out, new_st
+
+    if cfg.remat == "dots" and states is None:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+
+    xs = params["layers"] if states is None else (params["layers"], states)
+    x, new_states = jax.lax.scan(body, x, xs)
+    x = L.rmsnorm(params["final_norm"], x)
+    logits = L.unembed_apply(params["embed"], x)
+    return (logits, new_states) if states is not None else logits
+
+
+def init_decode_state(cfg: Mamba2Config, batch: int):
+    """Constant-size decode state (the SSM selling point)."""
+    return {
+        "conv": jnp.zeros((cfg.n_layers, batch, cfg.conv_width - 1,
+                           cfg.d_inner + 2 * cfg.n_groups * cfg.d_state),
+                          L.COMPUTE_DTYPE),
+        "ssm": jnp.zeros((cfg.n_layers, batch, cfg.n_heads, cfg.head_dim,
+                          cfg.d_state), jnp.float32),
+    }

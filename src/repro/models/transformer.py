@@ -1,0 +1,195 @@
+"""Dense / MoE decoder-only transformer (llama/qwen/gemma/dbrx family).
+
+One ``lax.scan`` over stacked layer parameters keeps the HLO size (and
+compile time) independent of depth — essential for the 61-layer kimi-k2
+dry-run on this container.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .moe import MoEConfig, moe_init, moe_apply
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    moe: Optional[MoEConfig] = None
+    tie_embeddings: bool = True
+    # remat policy for the scan body: "none" | "dots" | "full"
+    remat: str = "dots"
+    attn_impl: str = "reference"   # "reference" | "chunked"
+    q_chunk: int = 512
+    softmax_dtype: str = "f32"     # "f32" | "bf16" (perf variant)
+    loss_chunk: int = 0            # >0: chunked big-vocab cross-entropy
+
+    @property
+    def dh(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def attn(self) -> L.AttnConfig:
+        return L.AttnConfig(self.d_model, self.n_heads, self.n_kv, self.dh,
+                            self.qk_norm, self.rope_theta,
+                            impl=self.attn_impl, q_chunk=self.q_chunk,
+                            softmax_dtype=self.softmax_dtype)
+
+    def param_count(self) -> int:
+        D, F, V, H, K, dh = (self.d_model, self.d_ff, self.vocab,
+                             self.n_heads, self.n_kv, self.dh)
+        attn = D * H * dh + 2 * D * K * dh + H * dh * D
+        if self.moe:
+            ffn = self.moe.n_experts * 3 * D * self.moe.d_ff + \
+                D * self.moe.n_experts
+        else:
+            ffn = 3 * D * F
+        per_layer = attn + ffn + 2 * D
+        return self.n_layers * per_layer + V * D + D + \
+            (0 if self.tie_embeddings else V * D)
+
+    def active_param_count(self) -> int:
+        if not self.moe:
+            return self.param_count()
+        D = self.d_model
+        attn = D * self.n_heads * self.dh + 2 * D * self.n_kv * self.dh + \
+            self.n_heads * self.dh * D
+        ffn = self.moe.top_k * 3 * D * self.moe.d_ff + \
+            D * self.moe.n_experts
+        per_layer = attn + ffn + 2 * D
+        return self.n_layers * per_layer + self.vocab * D + D
+
+
+def init_layer(key, cfg: LMConfig):
+    ka, kf = jax.random.split(key)
+    p = {
+        "ln1": L.rmsnorm_init(cfg.d_model),
+        "ln2": L.rmsnorm_init(cfg.d_model),
+        "attn": L.attn_init(ka, cfg.attn),
+    }
+    if cfg.moe:
+        p["moe"] = moe_init(kf, cfg.moe)
+    else:
+        p["ffn"] = L.ffn_init(kf, cfg.d_model, cfg.d_ff)
+    return p
+
+
+def init(key, cfg: LMConfig):
+    ke, kl, ko = jax.random.split(key, 3)
+    stacked = jax.vmap(lambda k: init_layer(k, cfg))(
+        jax.random.split(kl, cfg.n_layers))
+    p = {
+        "embed": L.embed_init(ke, cfg.vocab, cfg.d_model),
+        "layers": stacked,
+        "final_norm": L.rmsnorm_init(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = L.embed_init(ko, cfg.vocab, cfg.d_model)
+    return p
+
+
+def _block(cfg: LMConfig, constrain, lp, x, positions, kv_cache=None,
+           cache_index=None):
+    h, new_cache = L.attn_apply(lp["attn"], cfg.attn,
+                                L.rmsnorm(lp["ln1"], x), positions,
+                                kv_cache=kv_cache, cache_index=cache_index,
+                                constrain=constrain)
+    x = x + h
+    hn = L.rmsnorm(lp["ln2"], x)
+    if cfg.moe:
+        x = x + moe_apply(lp["moe"], cfg.moe, hn, constrain)
+    else:
+        x = x + L.ffn_apply(lp["ffn"], hn, constrain)
+    return x, new_cache
+
+
+def forward(params, cfg: LMConfig, tokens, *, constrain=lambda t, *a: t,
+            kv_caches=None, cache_index=None, prefix_embed=None):
+    """tokens: (B, S) int32 -> logits (B, S, V).
+
+    ``kv_caches``: stacked (k, v) each (L, B, T, K, dh) for decode.
+    ``prefix_embed``: optional (B, P, D) embeddings prepended to the
+    token embeddings (VLM image patches / audio frames).
+    """
+    x = L.embed_apply(params["embed"], tokens)
+    if prefix_embed is not None:
+        x = jnp.concatenate([prefix_embed.astype(x.dtype), x], axis=1)
+    B, S, D = x.shape
+    start = 0 if cache_index is None else cache_index
+    positions = start + jnp.arange(S, dtype=jnp.int32)[None, :]
+    positions = jnp.broadcast_to(positions, (B, S))
+    x = constrain(x, "act_resid")
+
+    def body(carry, lp_and_cache):
+        x = carry
+        if kv_caches is None:
+            lp = lp_and_cache
+            x, _ = _block(cfg, constrain, lp, x, positions)
+            return x, None
+        lp, (ck, cv) = lp_and_cache
+        x, new_cache = _block(cfg, constrain, lp, x, positions,
+                              kv_cache=(ck, cv), cache_index=cache_index)
+        return x, new_cache
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body)
+    elif cfg.remat == "dots":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+
+    xs = params["layers"] if kv_caches is None else \
+        (params["layers"], kv_caches)
+    x, new_caches = jax.lax.scan(body, x, xs)
+    x = L.rmsnorm(params["final_norm"], x)
+    head = params.get("lm_head", params["embed"])
+    logits = L.unembed_apply(head, x)
+    return (logits, new_caches) if kv_caches is not None else logits
+
+
+def loss(params, cfg: LMConfig, tokens, labels, *,
+         constrain=lambda t, *a: t, prefix_embed=None, prefix_drop=0):
+    """Training loss; uses chunked big-vocab xent when cfg.loss_chunk."""
+    if cfg.loss_chunk <= 0:
+        logits = forward(params, cfg, tokens, constrain=constrain,
+                         prefix_embed=prefix_embed)
+        if prefix_drop:
+            logits = logits[:, prefix_drop:]
+        return L.softmax_xent(logits, labels)
+    # trunk only, then chunked projection+loss
+    x = L.embed_apply(params["embed"], tokens)
+    if prefix_embed is not None:
+        x = jnp.concatenate([prefix_embed.astype(x.dtype), x], axis=1)
+    B, S, D = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None],
+                                 (B, S))
+    x = constrain(x, "act_resid")
+
+    def body(xc, lp):
+        xc, _ = _block(cfg, constrain, lp, xc, positions)
+        return xc, None
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body)
+    elif cfg.remat == "dots":
+        body = jax.checkpoint(
+            body,
+            policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    x = L.rmsnorm(params["final_norm"], x)
+    if prefix_drop:
+        x = x[:, prefix_drop:]
+    head = params.get("lm_head", params["embed"])
+    return L.softmax_xent_chunked(head, x, labels, chunk=cfg.loss_chunk)

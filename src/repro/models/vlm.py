@@ -1,0 +1,55 @@
+"""PaliGemma-style VLM backbone: SigLIP patch-embedding STUB + gemma
+decoder.  Per the assignment the vision frontend is a stub —
+``input_specs()`` provides precomputed patch embeddings (B, P, D_vis)
+which a learned projection maps into the LM embedding space and
+prepends to the token embeddings (prefix-LM style).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from . import transformer as T
+from .layers import _he
+
+
+@dataclasses.dataclass(frozen=True)
+class VLMConfig:
+    name: str
+    lm: T.LMConfig
+    n_patches: int = 256
+    d_vision: int = 1152     # SigLIP-So400m width
+
+    def param_count(self) -> int:
+        return self.lm.param_count() + self.d_vision * self.lm.d_model
+
+    def active_param_count(self) -> int:
+        return self.param_count()
+
+
+def init(key, cfg: VLMConfig):
+    kl, kp = jax.random.split(key)
+    p = T.init(kl, cfg.lm)
+    p["vision_proj"] = _he(kp, (cfg.d_vision, cfg.lm.d_model))
+    return p
+
+
+def forward(params, cfg: VLMConfig, tokens, patches: Optional[jnp.ndarray],
+            *, kv_caches=None, cache_index=None,
+            constrain=lambda t, *a: t):
+    """tokens: (B, S_text); patches: (B, P, d_vision) stub embeddings.
+
+    Training: logits over the text positions (image prefix positions are
+    returned too; the loss masks them).  Decode: patches=None and the
+    image prefix is assumed already in the KV cache.
+    """
+    prefix = None
+    if patches is not None:
+        prefix = patches.astype(L.COMPUTE_DTYPE) @ params["vision_proj"]
+    return T.forward(params, cfg.lm, tokens, constrain=constrain,
+                     kv_caches=kv_caches, cache_index=cache_index,
+                     prefix_embed=prefix)

@@ -1,0 +1,130 @@
+"""AdamW with memory-scaled variants + int8 gradient compression.
+
+Large-scale memory posture (DESIGN.md §4): a 1T-param MoE on 512 chips
+cannot afford 12 bytes/param of fp32 optimizer state.  Modes:
+
+* ``adamw``      — fp32 m, v (default for <=10B archs);
+* ``adamw_lite`` — bf16 m + Adafactor-style factored v (row/col second
+  moments for matrices): ~2.3 bytes/param of state, which is what lets
+  kimi-k2 fit the (2,16,16) mesh (see EXPERIMENTS.md §Dry-run).
+
+Gradient compression: symmetric per-tensor int8 quantization used by the
+trainer's cross-pod reduction path (4x fewer DCN bytes); error feedback
+keeps the quantization bias bounded.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    mode: str = "adamw"          # "adamw" | "adamw_lite"
+    warmup: int = 100
+
+
+def _factored_shape(shape):
+    """v is factored for >=2-D params: keep row & col moments."""
+    return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+
+def init(params, cfg: OptConfig):
+    def m_like(p):
+        dt = jnp.float32 if cfg.mode == "adamw" else jnp.bfloat16
+        return jnp.zeros(p.shape, dt)
+
+    def v_like(p):
+        if cfg.mode == "adamw" or not _factored_shape(p.shape):
+            return jnp.zeros(p.shape, jnp.float32)
+        return {"row": jnp.zeros(p.shape[:-1], jnp.float32),
+                "col": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(m_like, params),
+        "v": jax.tree.map(v_like, params),
+    }
+
+
+def _is_factored(x):
+    return isinstance(x, dict) and set(x.keys()) == {"row", "col"}
+
+
+def _schedule(cfg: OptConfig, step):
+    warm = jnp.minimum(1.0, (step + 1) / max(cfg.warmup, 1))
+    return cfg.lr * warm
+
+
+def _vhat_update(v, g2, b2):
+    if isinstance(v, dict):  # factored
+        row = b2 * v["row"] + (1 - b2) * g2.mean(-1)
+        col = b2 * v["col"] + (1 - b2) * g2.mean(-2)
+        new_v = {"row": row, "col": col}
+        denom = jnp.maximum(row.mean(-1, keepdims=True), 1e-30)
+        vhat = (row[..., None] * col[..., None, :]) / denom[..., None]
+        return new_v, vhat
+    new_v = b2 * v + (1 - b2) * g2
+    return new_v, new_v
+
+
+def step(params, opt_state, grads, cfg: OptConfig):
+    """One AdamW update; params stay in their storage dtype (bf16)."""
+    t = opt_state["step"] + 1
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+    lr = _schedule(cfg, t)
+    bc1 = 1 - cfg.b1 ** t.astype(jnp.float32)
+    bc2 = 1 - cfg.b2 ** t.astype(jnp.float32)
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.flatten(grads)[0]
+    flat_m = jax.tree.flatten(opt_state["m"])[0]
+    flat_v, vdef = jax.tree.flatten(opt_state["v"], is_leaf=_is_factored)
+
+    new_p, new_m, new_v = [], [], []
+    for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v):
+        g32 = g.astype(jnp.float32) * scale
+        m32 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g32
+        v_new, vhat = _vhat_update(v, jnp.square(g32), cfg.b2)
+        update = (m32 / bc1) / (jnp.sqrt(vhat / bc2) + cfg.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            update = update + cfg.weight_decay * p.astype(jnp.float32)
+        new_p.append((p.astype(jnp.float32) - lr * update).astype(p.dtype))
+        new_m.append(m32.astype(m.dtype))
+        new_v.append(v_new)
+
+    return (jax.tree.unflatten(tdef, new_p),
+            {"step": t, "m": jax.tree.unflatten(tdef, new_m),
+             "v": jax.tree.unflatten(vdef, new_v)},
+            {"grad_norm": gnorm, "lr": lr})
+
+
+# ----------------------------------------------------- int8 compression
+def quantize_grads_int8(grads):
+    """Per-tensor symmetric int8: returns (q_tree, scale_tree)."""
+    def q(g):
+        g32 = g.astype(jnp.float32)
+        s = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-20) / 127.0
+        return (jnp.clip(jnp.round(g32 / s), -127, 127)
+                .astype(jnp.int8), s)
+
+    qs = jax.tree.map(q, grads)
+    return (jax.tree.map(lambda x: x[0], qs,
+                         is_leaf=lambda x: isinstance(x, tuple)),
+            jax.tree.map(lambda x: x[1], qs,
+                         is_leaf=lambda x: isinstance(x, tuple)))
+
+
+def dequantize_grads_int8(q, scales):
+    return jax.tree.map(lambda qi, s: qi.astype(jnp.float32) * s, q, scales)

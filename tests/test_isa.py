@@ -1,0 +1,103 @@
+"""ISA encode/decode + condition-LUT properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import asm, isa
+
+
+def test_cond_lut_complement_pairs():
+    """LT/GE, EQ/NE, LE/GT, LO/HS, LS/HI are complements for all flags."""
+    lut = isa.COND_LUT
+    for a, b in [(isa.COND_LT, isa.COND_GE), (isa.COND_EQ, isa.COND_NE),
+                 (isa.COND_LE, isa.COND_GT), (isa.COND_LO, isa.COND_HS),
+                 (isa.COND_LS, isa.COND_HI)]:
+        assert (lut[a] ^ lut[b]).all()
+
+
+def test_cond_lut_true_false():
+    assert isa.COND_LUT[isa.COND_T].all()
+    assert not isa.COND_LUT[isa.COND_F].any()
+
+
+@given(st.integers(-2**31, 2**31 - 1), st.integers(-2**31, 2**31 - 1))
+@settings(max_examples=200, deadline=None)
+def test_flags_model_matches_comparison(a, b):
+    """SZCO nibble of (a-b) + LUT == direct integer comparison."""
+    d = (a - b) & 0xFFFFFFFF
+    d_signed = d - 2**32 if d >= 2**31 else d
+    s = int(d_signed < 0)
+    z = int(d_signed == 0)
+    c = int((a & 0xFFFFFFFF) < (b & 0xFFFFFFFF))
+    a32 = np.int32(a)
+    b32 = np.int32(b)
+    with np.errstate(over="ignore"):
+        diff32 = np.int32(a32 - b32)
+        o = int(np.int32((a32 ^ b32) & (a32 ^ diff32)) < 0)
+    nib = s | (z << 1) | (c << 2) | (o << 3)
+    assert bool(isa.COND_LUT[isa.COND_LT, nib]) == (a < b)
+    assert bool(isa.COND_LUT[isa.COND_EQ, nib]) == (a == b)
+    assert bool(isa.COND_LUT[isa.COND_LE, nib]) == (a <= b)
+    assert bool(isa.COND_LUT[isa.COND_GT, nib]) == (a > b)
+    assert bool(isa.COND_LUT[isa.COND_GE, nib]) == (a >= b)
+    assert bool(isa.COND_LUT[isa.COND_NE, nib]) == (a != b)
+    ua, ub = a & 0xFFFFFFFF, b & 0xFFFFFFFF
+    assert bool(isa.COND_LUT[isa.COND_LO, nib]) == (ua < ub)
+    assert bool(isa.COND_LUT[isa.COND_HS, nib]) == (ua >= ub)
+
+
+def test_encode_field_roundtrip():
+    row = isa.encode(isa.IMAD, dst=3, src1=1, src2=2, src3=4, imm=-7,
+                     flags=isa.FLAG_SYNC, gpred=2, gcond=isa.COND_LT,
+                     pdst=1)
+    assert row[isa.F_OP] == isa.IMAD
+    assert row[isa.F_IMM] == -7
+    assert row[isa.F_FLAGS] & isa.FLAG_SYNC
+    assert "IMAD.S" in isa.decode_str(row)
+
+
+def test_assembler_text_matches_builder():
+    text = """
+    SSY done
+    S2R   r0, srtid
+    ISETP p0, r0, #16
+    @p0.GE BRA big
+    IADD  r1, r0, r0
+    BRA done
+big:
+    IADD  r1, r0, #100
+done.S:
+    IADD  r2, r0, #128
+    STG   [r2+0], r1
+    EXIT
+"""
+    code = asm.assemble(text)
+    p = asm.Program()
+    p.ssy("done")
+    p.s2r("r0", isa.SR_TID)
+    p.isetp("p0", "r0", 16)
+    p.guard("p0", "GE").bra("big")
+    p.iadd("r1", "r0", "r0")
+    p.bra("done")
+    p.label("big")
+    p.iadd("r1", "r0", 100)
+    p.label("done", sync=True)
+    p.iadd("r2", "r0", 128)
+    p.stg("r2", "r1")
+    p.exit()
+    np.testing.assert_array_equal(code, p.finish())
+
+
+def test_program_pad_traps_to_exit():
+    p = asm.Program()
+    p.nop()
+    code = p.finish(pad_to=8)
+    assert code.shape == (8, isa.NUM_FIELDS)
+    assert (code[1:, isa.F_OP] == isa.EXIT).all()
+
+
+def test_undefined_label_raises():
+    p = asm.Program()
+    p.bra("nowhere")
+    with pytest.raises(KeyError):
+        p.finish()

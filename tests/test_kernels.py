@@ -1,0 +1,111 @@
+"""Pallas kernels vs pure-jnp oracles, swept over shapes/dtypes
+(interpret mode: the kernel body executes on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import isa
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.matmul import matmul
+from repro.kernels.simt_alu import simt_alu
+
+
+# ------------------------------------------------------------- simt_alu
+@pytest.mark.parametrize("opc", [isa.MOV, isa.IADD, isa.ISUB, isa.IMUL,
+                                 isa.IMAD, isa.IMIN, isa.IMAX, isa.IABS,
+                                 isa.AND, isa.OR, isa.XOR, isa.NOT,
+                                 isa.SHL, isa.SHR, isa.SAR, isa.ISETP])
+def test_simt_alu_opcodes(opc, rng):
+    W, L = 9, 32
+    op = np.full(W, opc, np.int32)
+    imm = rng.integers(-99, 99, W).astype(np.int32)
+    s1 = rng.integers(-2**31, 2**31 - 1, (W, L)).astype(np.int32)
+    s2 = rng.integers(-2**31, 2**31 - 1, (W, L)).astype(np.int32)
+    s3 = rng.integers(-999, 999, (W, L)).astype(np.int32)
+    mask = (rng.random((W, L)) > 0.25).astype(np.int32)
+    out, nib = simt_alu(op, imm, s1, s2, s3, mask, interpret=True)
+    eout, enib = ref.simt_alu_ref(*(jnp.asarray(x) for x in
+                                    (op, imm, s1, s2, s3, mask)))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(eout))
+    np.testing.assert_array_equal(np.asarray(nib), np.asarray(enib))
+
+
+def test_simt_alu_mul_removed(rng):
+    W, L = 4, 32
+    op = np.full(W, isa.IMUL, np.int32)
+    z = np.zeros((W, L), np.int32)
+    s1 = rng.integers(-99, 99, (W, L)).astype(np.int32)
+    out, _ = simt_alu(op, np.zeros(W, np.int32), s1, s1, z,
+                      np.ones((W, L), np.int32), enable_mul=False,
+                      interpret=True)
+    assert (np.asarray(out) == 0).all()  # multiplier absent
+
+
+@given(st.integers(1, 40), st.integers(1, 32), st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_simt_alu_shape_sweep(W, L, seed):
+    rng = np.random.default_rng(seed)
+    op = rng.choice([isa.IADD, isa.XOR, isa.SHL], W).astype(np.int32)
+    imm = rng.integers(-9, 9, W).astype(np.int32)
+    s1 = rng.integers(-100, 100, (W, L)).astype(np.int32)
+    s2 = rng.integers(-100, 100, (W, L)).astype(np.int32)
+    s3 = np.zeros((W, L), np.int32)
+    mask = np.ones((W, L), np.int32)
+    out, _ = simt_alu(op, imm, s1, s2, s3, mask, interpret=True)
+    eout, _ = ref.simt_alu_ref(*(jnp.asarray(x) for x in
+                                 (op, imm, s1, s2, s3, mask)))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(eout))
+
+
+# --------------------------------------------------------------- matmul
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [(128, 128, 128), (256, 384, 128),
+                                   (384, 128, 256)])
+def test_matmul_sweep(shape, dtype, rng):
+    M, K, N = shape
+    a = jnp.asarray(rng.standard_normal((M, K)), dtype)
+    b = jnp.asarray(rng.standard_normal((K, N)), dtype)
+    got = matmul(a, b, bm=128, bn=128, bk=128, interpret=True)
+    exp = ref.matmul_ref(a, b)
+    tol = 1e-3 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(exp, np.float32),
+                               rtol=tol, atol=tol)
+
+
+# ------------------------------------------------------ flash attention
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("cfg", [
+    dict(Sq=256, Sk=256, dh=64, causal=True),
+    dict(Sq=256, Sk=256, dh=128, causal=True),
+    dict(Sq=128, Sk=512, dh=64, causal=False),
+    dict(Sq=512, Sk=512, dh=64, causal=True),
+])
+def test_flash_attention_sweep(cfg, dtype, rng):
+    BH = 3
+    q = jnp.asarray(rng.standard_normal((BH, cfg["Sq"], cfg["dh"])), dtype)
+    k = jnp.asarray(rng.standard_normal((BH, cfg["Sk"], cfg["dh"])), dtype)
+    v = jnp.asarray(rng.standard_normal((BH, cfg["Sk"], cfg["dh"])), dtype)
+    got = flash_attention(q, k, v, causal=cfg["causal"], bq=128, bk=128,
+                          interpret=True)
+    exp = ref.flash_attention_ref(q, k, v, causal=cfg["causal"])
+    tol = 2e-3 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(exp, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_attention_streaming_softmax_extremes(rng):
+    """Large logit ranges must not overflow the online softmax."""
+    q = jnp.asarray(rng.standard_normal((1, 256, 64)) * 30, jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 256, 64)) * 30, jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 256, 64)), jnp.float32)
+    got = flash_attention(q, k, v, causal=True, bq=128, bk=128,
+                          interpret=True)
+    assert np.isfinite(np.asarray(got)).all()
+    exp = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(exp),
+                               rtol=1e-2, atol=1e-2)

@@ -1,0 +1,150 @@
+"""The five paper benchmarks: correctness vs numpy oracles + the paper's
+scalability/customization observations."""
+import numpy as np
+import pytest
+
+from repro.core import customize, energy, scheduler
+from repro.core.machine import MachineConfig
+from repro.core.programs import ALL, PROGRAM_PAD, reduction
+
+
+@pytest.mark.parametrize("name", sorted(ALL))
+@pytest.mark.parametrize("n", [32, 64])
+def test_benchmark_matches_oracle(name, n, rng):
+    mod = ALL[name]
+    code = mod.build(n)
+    assert code.shape == (PROGRAM_PAD, 10)
+    g0 = mod.make_gmem(rng, n)
+    if name == "reduction":
+        gm, _ = reduction.run_passes(scheduler.run_grid, code, n, g0.copy())
+    else:
+        grid, bd = mod.launch(n)
+        gm = scheduler.run_grid(code, grid, bd, g0.copy()).gmem
+    np.testing.assert_array_equal(gm[mod.out_slice(n)], mod.oracle(g0, n))
+
+
+def test_multiblock_reduction(rng):
+    """Two-pass reduction (n > 2*BD*15 forces many blocks)."""
+    n = 2048
+    mod = ALL["reduction"]
+    code = mod.build(n)
+    g0 = mod.make_gmem(rng, n)
+    gm, results = reduction.run_passes(scheduler.run_grid, code, n,
+                                       g0.copy())
+    assert len(results) == 2  # 8 blocks -> 1
+    np.testing.assert_array_equal(gm[mod.out_slice(n)], mod.oracle(g0, n))
+
+
+def test_same_binary_same_interpreter(rng):
+    """Overlay property: all five benchmarks run through ONE jit cache
+    entry (same padded program shape, same machine config)."""
+    from repro.core.machine import _run_block_jit
+    if not hasattr(_run_block_jit, "_cache_size"):
+        pytest.skip("jit cache introspection unavailable")
+    _run_block_jit.clear_cache()
+    n = 32
+    for name, mod in ALL.items():
+        code = mod.build(n)
+        g0 = mod.make_gmem(rng, n)
+        grid, bd = mod.launch(n)
+        scheduler.run_grid(code, grid, bd, g0, chunk=4)
+    sizes = _run_block_jit._cache_size()
+    # one entry per distinct (block_dim, gmem_size); program CONTENTS
+    # never retrace.  5 benchmarks share <= 5 entries (not 5 x variants).
+    assert sizes <= 5, sizes
+
+
+def test_sp_scaling_trend(rng):
+    """Fig. 4: more SPs per SM -> fewer cycles, with diminishing returns."""
+    n = 64
+    mod = ALL["matmul"]
+    code = mod.build(n)
+    g0 = mod.make_gmem(rng, n)
+    grid, bd = mod.launch(n)
+    cycles = {}
+    for n_sp in (8, 16, 32):
+        res = scheduler.run_grid(code, grid, bd, g0.copy(),
+                                 MachineConfig(n_sp=n_sp))
+        cycles[n_sp] = res.sm_cycles(1)
+    assert cycles[8] > cycles[16] > cycles[32]
+    sp8_speedup = cycles[8] / cycles[32]
+    assert 1.5 < sp8_speedup <= 4.0  # diminishing returns vs 4x ideal
+
+
+def test_two_sm_scaling_matches_table3(rng):
+    """Table 3: 2-SM speedups in [1.7, 2.0] for multi-block benchmarks."""
+    n = 64
+    for name in ("matmul", "transpose", "autocorr"):
+        mod = ALL[name]
+        code = mod.build(n)
+        grid, bd = mod.launch(n)
+        if grid[0] * grid[1] < 2:
+            continue
+        res = scheduler.run_grid(code, grid, bd, mod.make_gmem(rng, n))
+        s = res.sm_cycles(1) / res.sm_cycles(2)
+        assert 1.5 <= s <= 2.0, (name, s)
+
+
+def test_scalar_model_speedup_positive(rng):
+    """FlexGrip beats the scalar (MicroBlaze-model) core on every
+    benchmark — the paper's Fig. 4 precondition."""
+    n = 64
+    for name, mod in ALL.items():
+        code = mod.build(n)
+        grid, bd = mod.launch(n)
+        res = scheduler.run_grid(code, grid, bd, mod.make_gmem(rng, n))
+        scal = energy.scalar_model_cycles(res, mod.n_threads(n))
+        simt = res.sm_cycles(1)
+        assert scal / simt > 2.0, (name, scal / simt)
+
+
+def test_customized_variant_still_correct(rng):
+    """Running each benchmark on its minimal variant gives the same
+    result as baseline (Table 6's 'same bitstream family' claim)."""
+    n = 32
+    for name, mod in ALL.items():
+        code = mod.build(n)
+        cfg = customize.minimal_config(code)
+        assert not customize.validate(code, cfg)
+        g0 = mod.make_gmem(rng, n)
+        if name == "reduction":
+            gm, _ = reduction.run_passes(scheduler.run_grid, code, n,
+                                         g0.copy(), cfg=cfg)
+        else:
+            grid, bd = mod.launch(n)
+            gm = scheduler.run_grid(code, grid, bd, g0.copy(), cfg).gmem
+        np.testing.assert_array_equal(gm[mod.out_slice(n)],
+                                      mod.oracle(g0, n))
+
+
+def test_energy_model_reductions(rng):
+    """Energy proxy reproduces the paper's *directional* results:
+    (a) SIMT saves substantial dynamic energy vs scalar (Table 5 ~80%);
+    (b) customization saves energy vs baseline config (Table 6)."""
+    n = 64
+    mod = ALL["bitonic"]
+    code = mod.build(n)
+    grid, bd = mod.launch(n)
+    res = scheduler.run_grid(code, grid, bd, mod.make_gmem(rng, n))
+    e_simt = energy.simt_energy(res, MachineConfig()).total
+    e_scal = energy.scalar_energy(res, mod.n_threads(n)).total
+    assert e_simt < 0.6 * e_scal  # >=40% reduction
+    cfg_min = customize.minimal_config(code)
+    e_min = energy.simt_energy(res, cfg_min).total
+    assert e_min < e_simt
+
+
+def test_bitonic_multiblock_segments(rng):
+    """blocks>1: each block sorts its own segment (enables 2-SM use)."""
+    from repro.core.programs import bitonic
+    bitonic.BLOCKS = 3
+    try:
+        n = 32
+        code = bitonic.build(n, blocks=3)
+        g0 = bitonic.make_gmem(rng, n)
+        res = scheduler.run_grid(code, *bitonic.launch(n), g0.copy())
+        np.testing.assert_array_equal(res.gmem[bitonic.out_slice(n)],
+                                      bitonic.oracle(g0, n))
+        assert res.sm_cycles(1) > res.sm_cycles(2)
+    finally:
+        bitonic.BLOCKS = 1

@@ -1,0 +1,137 @@
+"""Sharding rules + debug-mesh integration (no 512-device requirement)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import configs
+from repro.launch import mesh as M
+from repro.launch.steps import build_train_step
+from repro.models import api
+from repro.optim import OptConfig, opt_init
+
+
+@pytest.fixture(scope="module")
+def prod_mesh():
+    # a (4, 2) stand-in mesh exercises the same rule logic on 8 "devices"
+    if len(jax.devices()) >= 8:
+        return jax.make_mesh((4, 2), ("data", "model"))
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def test_param_rules_shard_expected_axes():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    assert M.param_spec("embed", (49152, 960), mesh) == P("model", None)
+    assert M.param_spec("layers/attn/wq", (32, 960, 960), mesh) == \
+        P(None, "data", "model")
+    assert M.param_spec("layers/attn/wo", (32, 960, 960), mesh) == \
+        P(None, "model", "data")
+    assert M.param_spec("layers/moe/wi", (61, 384, 7168, 2048), mesh) == \
+        P(None, "model", "data", None)
+    assert M.param_spec("layers/ln1", (32, 960), mesh) == P()
+    assert M.param_spec("final_norm", (960,), mesh) == P()
+
+
+def test_param_rules_drop_nondivisible_axes():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    # force axis sizes via a fake mesh dict is awkward; instead verify the
+    # _fit helper directly with a production-shaped mesh mock
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+        axis_names = ("data", "model")
+    # vocab 50280 % 16 != 0 -> vocab axis must not shard
+    spec = M._fit(FakeMesh, (50280, 768), ("model", None))
+    assert spec == P(None, None)
+    spec2 = M._fit(FakeMesh, (49152, 960), ("model", None))
+    assert spec2 == P("model", None)
+
+
+def test_opt_state_spec_mirrors_params():
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+        axis_names = ("data", "model")
+    ps = M.param_spec("layers/ffn/wi", (32, 960, 2560), FakeMesh)
+    ms = M.opt_spec("m/layers/ffn/wi", (32, 960, 2560), FakeMesh)
+    assert ps == ms
+    # factored rows/cols keep compatible prefixes
+    row = M.opt_spec("v/layers/ffn/wi/row", (32, 960), FakeMesh)
+    col = M.opt_spec("v/layers/ffn/wi/col", (32, 2560), FakeMesh)
+    assert row == P(None, "data")
+    assert col == P(None, "model")
+
+
+def test_activation_specs():
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+        axis_names = ("data", "model")
+    assert M.act_spec("act_resid", (256, 4096, 960), FakeMesh) == \
+        P("data", None, None)
+    assert M.act_spec("act_ffn", (256, 4096, 2560), FakeMesh) == \
+        P("data", None, "model")
+    # 15 heads don't divide 16 -> head axis dropped
+    assert M.act_spec("act_heads", (256, 4096, 15, 64), FakeMesh) == \
+        P("data", None, None, None)
+
+
+def test_decode_state_spec_long_context():
+    class FakeMesh:
+        shape = {"pod": 2, "data": 16, "model": 16}
+        axis_names = ("pod", "data", "model")
+    # batch=1: shard time axis; kv heads 32 shard over model
+    spec = M.decode_state_spec("kv/0", (7, 1, 524288, 32, 64), FakeMesh)
+    assert spec == P(None, None, ("pod", "data"), "model", None)
+    # batch=128: shard batch
+    spec2 = M.decode_state_spec("kv/0", (28, 128, 32768, 8, 128), FakeMesh)
+    assert spec2[1] == ("pod", "data")
+
+
+def test_train_step_runs_on_debug_mesh(prod_mesh):
+    spec = configs.reduced(configs.get("smollm_360m"))
+    opt_cfg = OptConfig(lr=1e-3)
+    _, jit_for, _ = build_train_step(spec, prod_mesh, opt_cfg,
+                                     donate=False)
+    with jax.set_mesh(prod_mesh):
+        params = api.init(jax.random.key(0), spec)
+        opt_state = opt_init(params, opt_cfg)
+        B, S = 4, 32
+        batch = {"tokens": jnp.zeros((B, S), jnp.int32),
+                 "labels": jnp.ones((B, S), jnp.int32)}
+        step = jit_for(jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), batch))
+        p2, o2, stats = step(params, opt_state, batch)
+    assert bool(jnp.isfinite(stats["loss"]))
+    # params actually changed
+    delta = sum(float(jnp.sum(jnp.abs(a.astype(jnp.float32) -
+                                      b.astype(jnp.float32))))
+                for a, b in zip(jax.tree.leaves(params),
+                                jax.tree.leaves(p2)))
+    assert delta > 0
+
+
+def test_dryrun_collective_parsing():
+    from repro.launch import hloanalysis as H
+    hlo = """
+HloModule test
+
+ENTRY %main (a: f32[16,16]) -> f32[16,16] {
+  %a = f32[16,16]{1,0} parameter(0)
+  %ar = f32[16,16]{1,0} all-reduce(%a), replica_groups={}, to_apply=%sum
+  ROOT %ag = f32[16,16]{1,0} all-gather(%ar), dimensions={0}
+}
+"""
+    cost = H.analyze(hlo)
+    assert cost.coll_by_type["all-reduce"] == 16 * 16 * 4
+    assert cost.coll_by_type["all-gather"] == 16 * 16 * 4
+
+
+def test_moe_expert_decode_regime_shards_contraction():
+    """§Perf M5: tiny per-group capacity (decode) shards the contracted
+    D over data (weights stay put); train capacity shards groups."""
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+        axis_names = ("data", "model")
+    dec = M.act_spec("moe_expert", (128, 384, 4, 7168), FakeMesh, "seq")
+    assert dec == P(None, "model", None, "data")
+    trn = M.act_spec("moe_expert", (2048, 384, 16, 7168), FakeMesh, "seq")
+    assert trn == P("data", "model", None, None)
