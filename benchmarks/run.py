@@ -8,15 +8,17 @@ results are machine-readable.
   fig5_table3_2sm    — 2-SM speedups & 2SM/1SM scaling        [Fig 5/T3]
   table5_energy      — dynamic-energy reduction vs scalar     [Table 5]
   table6_customize   — per-app minimal variant: area/energy   [Table 6]
+  sched_wallclock    — run_grid wall-clock, 16x16-grid matmul [ours]
   kernel_micro       — Pallas kernel wall-times (interpret)   [ours]
   roofline_summary   — dry-run roofline terms per cell        [ours]
 
 Input sizes default to 64 (paper uses up to 256); set BENCH_N=128/256
 for the full sweep — cycle counts are exact at any size, wall time just
-grows.
+grows.  ``--smoke`` runs a CI-sized subset (< 2 min on a laptop CPU).
 """
 from __future__ import annotations
 
+import argparse
 import glob
 import json
 import os
@@ -166,6 +168,31 @@ def table6_customize():
              f"dyn_energy_red={100 * (1 - e_min / e_base):.0f}%")
 
 
+def sched_wallclock(n: int | None = None, repeats: int = 1):
+    """Wall-clock of the device-resident grid scheduler on the paper's
+    largest matmul launch: a 16x16 grid of 16x16-thread blocks
+    (n=256).  This is the config the all-warp pipeline + on-device
+    merge refactor targets; the seed per-warp/host-merge scheduler ran
+    the same config >= 3x slower on the same host.  Heavy on a small
+    CPU (~15 min at n=256): override with BENCH_SCHED_N for a quicker
+    point, e.g. BENCH_SCHED_N=64 for a 4x4 grid."""
+    from repro.core.programs import matmul as mm
+    if n is None:
+        n = int(os.environ.get("BENCH_SCHED_N", "256"))
+    code = mm.build(n)
+    g0 = mm.make_gmem(np.random.default_rng(0), n)
+    grid, bd = mm.launch(n)
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        res = scheduler.run_grid(code, grid, bd, g0.copy())
+        best = min(best, time.perf_counter() - t0)
+    np.testing.assert_array_equal(res.gmem[mm.out_slice(n)],
+                                  mm.oracle(g0, n))
+    emit(f"sched_matmul_{grid[0]}x{grid[1]}grid", best * 1e6,
+         f"blocks={grid[0] * grid[1]};sm_cycles={res.sm_cycles(1)}")
+
+
 def kernel_micro():
     """Pallas kernel micro-benchmarks (interpret mode on CPU)."""
     import jax.numpy as jnp
@@ -203,14 +230,36 @@ def roofline_summary():
              f"lt={r['collective_t']:.4f}")
 
 
+def smoke() -> None:
+    """CI-sized subset: area table, one speedup point per benchmark at
+    the paper's smallest size, and the 16x16-grid scheduler number at a
+    reduced size.  Completes in well under two minutes on CPU."""
+    table2_area()
+    for name in sorted(ALL):
+        res, wall, mod = _run(name, n=32, cfg=MachineConfig(n_sp=8))
+        simt = res.sm_cycles(1)
+        scal = energy.scalar_model_cycles(res, mod.n_threads(32))
+        emit(f"smoke_fig4_{name}", wall * 1e6,
+             f"speedup={scal / simt:.2f}")
+    sched_wallclock(n=64, repeats=1)
+
+
 def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized subset (< 2 min)")
+    args = ap.parse_args()
     print("name,us_per_call,derived")
+    if args.smoke:
+        smoke()
+        return
     table2_area()
     fig4_speedup()
     fig4_input_size_sweep()
     fig5_table3_2sm()
     table5_energy()
     table6_customize()
+    sched_wallclock()
     kernel_micro()
     roofline_summary()
 

@@ -50,7 +50,7 @@ def main():
     mesh = M.make_debug_mesh(len(jax.devices()))
     opt_cfg = OptConfig(lr=6e-4, warmup=50)
     _, jit_for, _ = build_train_step(spec, mesh, opt_cfg)
-    with jax.set_mesh(mesh):
+    with M.use_mesh(mesh):
         params = api.init(jax.random.key(0), spec)
         opt = opt_init(params, opt_cfg)
 

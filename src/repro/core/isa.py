@@ -166,6 +166,20 @@ SMEM_OPS = (LDS, STS)
 CTRL_OPS = (BRA, SSY, BAR, EXIT, NOP)
 PRED_OPS = (ISETP,)
 
+# ---------------------------------------------------- opcode-class tables
+# Dense boolean tables indexed by opcode, for vectorized dispatch: the
+# all-warp pipeline classifies a (W,)-vector of fetched opcodes with one
+# gather instead of ``isin`` chains.  Built once at import; the machine
+# converts them to device arrays.
+WRITES_REG = np.zeros(NUM_OPCODES, dtype=bool)
+WRITES_REG[list(ALU_OPS) + list(MUL_OPS) + [LDG, LDS]] = True
+
+IS_GMEM = np.zeros(NUM_OPCODES, dtype=bool)
+IS_GMEM[list(GMEM_OPS)] = True
+
+IS_SMEM = np.zeros(NUM_OPCODES, dtype=bool)
+IS_SMEM[list(SMEM_OPS)] = True
+
 WARP_SIZE = 32
 
 

@@ -1,11 +1,11 @@
-"""The FlexGrip-JAX streaming multiprocessor (SM).
+"""The FlexGrip-JAX streaming multiprocessor (SM) — public facade.
 
-This is the paper's five-stage SIMT pipeline re-expressed as a
-``lax.while_loop`` whose body performs one *issue*: the warp scheduler
-picks a ready warp round-robin, the instruction at that warp's PC is
-fetched from the (runtime-data!) program array, decoded, its operands
-read for all 32 lanes, executed on the vector ALU, and results written
-back under the active-thread mask — Fetch/Decode/Read/Execute/Write.
+The SM implementation lives in :mod:`repro.core.pipeline`, one module
+per paper pipeline stage (Fetch/Decode, Read, Execute, Write, Control)
+plus the seed single-warp reference interpreter.  This module keeps the
+stable import surface — ``MachineConfig``, ``run_block``, the state and
+counter types — so the scheduler, energy model, customization analyzer,
+benchmarks and tests are agnostic to the issue discipline.
 
 Faithful architectural features (paper §3-4):
 
@@ -25,392 +25,24 @@ Faithful architectural features (paper §3-4):
 Because the program is an *input array*, one jit-compiled interpreter
 executes any kernel binary of the same padded length: the overlay
 property that motivates the paper.
+
+Issue disciplines (``MachineConfig.execute_backend``):
+
+* ``"jnp"`` / ``"pallas"`` — lockstep all-warp issue: every READY warp
+  fetches, decodes and executes its instruction in the same
+  ``lax.while_loop`` iteration over a (W, 32) lane grid, with the
+  execute stage running either as pure jnp or as the Pallas ``simt_alu``
+  VPU kernel.  Cycle counters still charge the seed's serialized-issue
+  cost, so all paper timing results are unchanged.
+* ``"reference"`` — the seed interpreter: one round-robin warp per
+  iteration; the bit-exact oracle for the vectorized paths.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import NamedTuple
+from .pipeline import (  # noqa: F401  (re-exported public surface)
+    EXECUTE_BACKENDS, FINISHED, READY, WAIT, Counters, MachineConfig,
+    SMState, _BITS, _LANES, _pack, _run_block_jit, _unpack, init_state,
+    issue_one_warp, run_block, sm_step)
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from . import isa
-
-READY, WAIT, FINISHED = 0, 1, 2
-
-_LANES = jnp.arange(isa.WARP_SIZE, dtype=jnp.int32)
-_BITS = jnp.uint32(1) << jnp.arange(isa.WARP_SIZE, dtype=jnp.uint32)
-
-
-@dataclasses.dataclass(frozen=True)
-class MachineConfig:
-    """Static architectural parameters (the customization axes of §4)."""
-    n_sp: int = 8                 # scalar processors per SM (8/16/32)
-    n_regs: int = 16              # 32-bit GPRs per thread
-    warp_stack_depth: int = 32    # §4.1 customization axis
-    enable_mul: bool = True       # §4.2: multiplier present?
-    num_read_operands: int = 3    # §4.2: third read port present?
-    smem_words: int = 4096        # 16 KB shared memory per SM
-    mem_latency_global: int = 8   # extra cycles per global access (AXI)
-    mem_latency_shared: int = 2   # extra cycles per shared access
-    max_cycles: int = 4_000_000   # runaway-program guard
-
-    @property
-    def rows_per_warp(self) -> int:
-        """A 32-thread warp is arranged into rows of n_sp threads."""
-        return max(1, isa.WARP_SIZE // self.n_sp)
-
-    def lut_bits(self, n_warps: int = 8) -> int:
-        """LUT/FF-area proxy (paper Tables 2/6): warp-stack registers
-        (66 bits/entry, Fig. 2), predicate file, per-warp control state,
-        and the multiplier / third-operand-port datapaths.  The register
-        file is EXCLUDED — on the FPGA it lives in block RAM, which the
-        paper reports separately from LUT area.
-        """
-        stack = n_warps * self.warp_stack_depth * 66
-        pred = n_warps * isa.WARP_SIZE * 4 * 4
-        ctrl = n_warps * (32 + 32 + 2)
-        # read-operand units + ALU datapath per SP lane
-        read_units = self.num_read_operands * self.n_sp * 32 * 3
-        mul = (self.n_sp * 32 * 24) if self.enable_mul else 0
-        return stack + pred + ctrl + read_units + mul
-
-    def state_bits(self, n_warps: int = 8) -> int:
-        """Total architectural state (LUT proxy + BRAM regfile)."""
-        regfile = n_warps * isa.WARP_SIZE * self.n_regs * 32
-        return self.lut_bits(n_warps) + regfile
-
-
-class Counters(NamedTuple):
-    """Per-block dynamic-activity counters (drive the energy model)."""
-    op_issues: jnp.ndarray   # (NUM_OPCODES,) instruction issues per opcode
-    op_lanes: jnp.ndarray    # (NUM_OPCODES,) active-lane executions per opcode
-    cycles: jnp.ndarray      # SM cycles for this block
-    stack_ops: jnp.ndarray   # warp-stack pushes + pops
-    max_sp: jnp.ndarray      # observed maximum warp-stack depth
-    overflow: jnp.ndarray    # 1 if a push ever exceeded warp_stack_depth
-
-
-class SMState(NamedTuple):
-    pc: jnp.ndarray          # (W,) int32
-    alive: jnp.ndarray       # (W, 32) bool — thread not EXITed
-    active: jnp.ndarray      # (W, 32) bool — current divergence mask
-    wstate: jnp.ndarray      # (W,) int32 READY/WAIT/FINISHED
-    stack_addr: jnp.ndarray  # (W, D) int32
-    stack_type: jnp.ndarray  # (W, D) int32
-    stack_mask: jnp.ndarray  # (W, D) uint32
-    sp: jnp.ndarray          # (W,) int32
-    pred: jnp.ndarray        # (W, 32, 4) int32 SZCO nibbles
-    regs: jnp.ndarray        # (W, 32, R) int32
-    smem: jnp.ndarray        # (S,) int32
-    gmem: jnp.ndarray        # (G+1,) int32 (last word = store sentinel)
-    gw: jnp.ndarray          # (G+1,) bool — global words written by block
-    last_warp: jnp.ndarray   # scalar int32 (round-robin pointer)
-    counters: Counters
-
-
-def _pack(mask_bool: jnp.ndarray) -> jnp.ndarray:
-    return jnp.sum(jnp.where(mask_bool, _BITS, jnp.uint32(0)))
-
-
-def _unpack(mask_u32: jnp.ndarray) -> jnp.ndarray:
-    return ((mask_u32 >> _LANES.astype(jnp.uint32)) & jnp.uint32(1)) != 0
-
-
-def _init_state(cfg: MachineConfig, n_warps: int, block_dim: int,
-                gmem: jnp.ndarray) -> SMState:
-    W, D, R = n_warps, cfg.warp_stack_depth, cfg.n_regs
-    tid = _LANES[None, :] + 32 * jnp.arange(W, dtype=jnp.int32)[:, None]
-    exists = tid < block_dim
-    zero = jnp.zeros((), jnp.int32)
-    counters = Counters(
-        op_issues=jnp.zeros((isa.NUM_OPCODES,), jnp.int32),
-        op_lanes=jnp.zeros((isa.NUM_OPCODES,), jnp.int32),
-        cycles=zero, stack_ops=zero, max_sp=zero, overflow=zero)
-    return SMState(
-        pc=jnp.zeros((W,), jnp.int32),
-        alive=exists,
-        active=exists,
-        wstate=jnp.where(jnp.any(exists, axis=1), READY, FINISHED)
-                  .astype(jnp.int32),
-        stack_addr=jnp.zeros((W, D), jnp.int32),
-        stack_type=jnp.zeros((W, D), jnp.int32),
-        stack_mask=jnp.zeros((W, D), jnp.uint32),
-        sp=jnp.zeros((W,), jnp.int32),
-        pred=jnp.zeros((W, isa.WARP_SIZE, 4), jnp.int32),
-        regs=jnp.zeros((W, isa.WARP_SIZE, R), jnp.int32),
-        smem=jnp.zeros((cfg.smem_words,), jnp.int32),
-        gmem=jnp.concatenate([gmem.astype(jnp.int32),
-                              jnp.zeros((1,), jnp.int32)]),
-        gw=jnp.zeros((gmem.shape[0] + 1,), bool),
-        last_warp=jnp.array(W - 1, jnp.int32),
-        counters=counters)
-
-
-def _issue(cfg: MachineConfig, code: jnp.ndarray, lut: jnp.ndarray,
-           block_dim_xy: jnp.ndarray, block_xy: jnp.ndarray,
-           grid_xy: jnp.ndarray, st: SMState) -> SMState:
-    """One scheduler issue — the whole 5-stage pipeline for one warp."""
-    W = st.pc.shape[0]
-    G = st.gmem.shape[0] - 1
-
-    # ---- barrier release: if nothing is ready, wake all BAR waiters
-    ready = st.wstate == READY
-    none_ready = ~jnp.any(ready)
-    wstate = jnp.where(none_ready & (st.wstate == WAIT), READY, st.wstate)
-    ready = wstate == READY
-
-    # ---- warp scheduler: round-robin pick of the next ready warp
-    order = (st.last_warp + 1 + jnp.arange(W, dtype=jnp.int32)) % W
-    w = order[jnp.argmax(ready[order])]
-
-    # ---- Fetch
-    pc_w = st.pc[w]
-    instr = code[pc_w]
-    # ---- Decode
-    op = instr[isa.F_OP]
-    dst = instr[isa.F_DST]
-    src1 = instr[isa.F_SRC1]
-    src2 = instr[isa.F_SRC2]
-    src3 = instr[isa.F_SRC3]
-    imm = instr[isa.F_IMM]
-    flags = instr[isa.F_FLAGS]
-    gpred = instr[isa.F_GPRED]
-    gcond = instr[isa.F_GCOND]
-    pdst = instr[isa.F_PDST]
-
-    alive_w = st.alive[w]
-    active_w = st.active[w]
-    sp_w = st.sp[w]
-
-    # ---- reconvergence-point pop (.S), §4.1 / Fig. 2 ------------------
-    top = jnp.maximum(sp_w - 1, 0)
-    top_addr = st.stack_addr[w, top]
-    top_type = st.stack_type[w, top]
-    top_mask = _unpack(st.stack_mask[w, top])
-    do_pop = ((flags & isa.FLAG_SYNC) != 0) & (sp_w > 0)
-    pop_taken = do_pop & (top_type == isa.STACK_TAKEN)
-    # TAKEN pop: jump to the stored taken address with the stored mask and
-    # spend this cycle on the jump.  RECONV pop: restore the pre-divergence
-    # mask and execute this instruction in the same issue.
-    active_w = jnp.where(do_pop, top_mask, active_w)
-    sp_w = sp_w - jnp.where(do_pop, 1, 0)
-    exec_this = ~pop_taken
-
-    # ---- guard / condition evaluation (predicate LUT of Fig. 2) -------
-    pred_w = st.pred[w]                                  # (32, 4)
-    nib = pred_w[_LANES, gpred]                          # (32,)
-    cond_val = lut[gcond, nib]                           # (32,) bool
-    guarded = (flags & isa.FLAG_GUARD) != 0
-    gm = jnp.where(guarded, cond_val, True)
-    exec_mask = active_w & alive_w & gm & exec_this
-
-    # ---- Read stage: parallel source-operand units (§4.2) -------------
-    regs_w = st.regs[w]                                  # (32, R)
-    s1 = jnp.where((flags & isa.FLAG_SRC1_IMM) != 0, imm,
-                   regs_w[_LANES, src1])
-    s2 = jnp.where((flags & isa.FLAG_SRC2_IMM) != 0, imm,
-                   regs_w[_LANES, src2])
-    s3 = regs_w[_LANES, src3] if cfg.num_read_operands >= 3 \
-        else jnp.zeros_like(s1)
-
-    # ---- special-register values for S2R -------------------------------
-    tid_flat = w * 32 + _LANES
-    bdx, bdy = block_dim_xy[0], block_dim_xy[1]
-    srs = jnp.stack([
-        tid_flat % bdx, tid_flat // bdx,          # tidx, tidy
-        jnp.broadcast_to(block_xy[0], (32,)),     # ctax
-        jnp.broadcast_to(block_xy[1], (32,)),     # ctay
-        jnp.broadcast_to(bdx, (32,)),             # ntidx
-        jnp.broadcast_to(bdy, (32,)),             # ntidy
-        jnp.broadcast_to(grid_xy[0], (32,)),      # nctax
-        jnp.broadcast_to(grid_xy[1], (32,)),      # nctay
-        tid_flat,                                 # flat tid
-        jnp.broadcast_to(block_xy[1] * grid_xy[0] + block_xy[0], (32,)),
-        jnp.broadcast_to(bdx * bdy, (32,)),       # flat block size
-    ]).astype(jnp.int32)
-    s2r_val = srs[jnp.clip(imm, 0, srs.shape[0] - 1)]
-
-    # ---- Execute stage: vector ALU (compute all, select by opcode) ----
-    sh = s2 & 31
-    u1 = s1.astype(jnp.uint32)
-    mul_lo = (s1 * s2) if cfg.enable_mul else jnp.zeros_like(s1)
-    mad = (s1 * s2 + s3) if (cfg.enable_mul and
-                             cfg.num_read_operands >= 3) \
-        else jnp.zeros_like(s1)
-    addr = s1 + imm                                      # memory address
-    gaddr = jnp.clip(addr, 0, G - 1)
-    saddr = jnp.clip(addr, 0, cfg.smem_words - 1)
-    ld_g = st.gmem[gaddr]
-    ld_s = st.smem[saddr]
-
-    # ISETP flags of (s1 - s2): sign, zero, carry(borrow), overflow
-    diff = s1 - s2
-    f_s = (diff < 0).astype(jnp.int32)
-    f_z = (diff == 0).astype(jnp.int32)
-    f_c = (u1 < s2.astype(jnp.uint32)).astype(jnp.int32)
-    f_o = (((s1 ^ s2) & (s1 ^ diff)) < 0).astype(jnp.int32)
-    nib_new = f_s | (f_z << 1) | (f_c << 2) | (f_o << 3)
-
-    result = jnp.select(
-        [op == o for o in (isa.MOV, isa.IADD, isa.ISUB, isa.IMUL, isa.IMAD,
-                           isa.IMIN, isa.IMAX, isa.IABS, isa.AND, isa.OR,
-                           isa.XOR, isa.NOT, isa.SHL, isa.SHR, isa.SAR,
-                           isa.ISET, isa.SELP, isa.S2R, isa.LDG, isa.LDS)],
-        [s2, s1 + s2, s1 - s2, mul_lo, mad,
-         jnp.minimum(s1, s2), jnp.maximum(s1, s2), jnp.abs(s1),
-         s1 & s2, s1 | s2,
-         s1 ^ s2, ~s1, (u1 << sh.astype(jnp.uint32)).astype(jnp.int32),
-         (u1 >> sh.astype(jnp.uint32)).astype(jnp.int32), s1 >> sh,
-         cond_val.astype(jnp.int32), jnp.where(cond_val, s1, s2), s2r_val,
-         ld_g, ld_s],
-        jnp.zeros_like(s1))
-
-    # ---- Write stage ----------------------------------------------------
-    has_dst = jnp.isin(op, jnp.array(
-        (isa.MOV, isa.IADD, isa.ISUB, isa.IMUL, isa.IMAD, isa.IMIN,
-         isa.IMAX, isa.IABS, isa.AND, isa.OR, isa.XOR, isa.NOT, isa.SHL,
-         isa.SHR, isa.SAR, isa.ISET, isa.SELP, isa.S2R, isa.LDG, isa.LDS),
-        dtype=jnp.int32))
-    wr = exec_mask & has_dst
-    new_dcol = jnp.where(wr, result, regs_w[_LANES, dst])
-    regs = st.regs.at[w, _LANES, dst].set(new_dcol)
-
-    is_setp = op == isa.ISETP
-    new_pcol = jnp.where(exec_mask & is_setp, nib_new, pred_w[_LANES, pdst])
-    pred = st.pred.at[w, _LANES, pdst].set(new_pcol)
-
-    # global / shared stores (inactive lanes write the sentinel word)
-    st_g = exec_mask & (op == isa.STG)
-    gidx = jnp.where(st_g, gaddr, G)
-    gmem = st.gmem.at[gidx].set(jnp.where(st_g, s2, st.gmem[gidx]))
-    gwrt = st.gw.at[gidx].set(st.gw[gidx] | st_g)
-
-    st_s = exec_mask & (op == isa.STS)
-    sidx = jnp.where(st_s, saddr, cfg.smem_words - 1)
-    smem = st.smem.at[sidx].set(jnp.where(st_s, s2, st.smem[sidx]))
-
-    # ---- control flow ----------------------------------------------------
-    part = active_w & alive_w & exec_this      # lanes participating in BRA
-    # BRA condition comes from the guard LUT; an unguarded BRA is taken by
-    # every participating lane.
-    taken = jnp.where(guarded, part & cond_val, part)
-    ntk = part & ~taken
-    any_t = jnp.any(taken)
-    any_n = jnp.any(ntk)
-
-    is_bra = (op == isa.BRA) & exec_this
-    is_ssy = (op == isa.SSY) & exec_this
-    diverge = is_bra & any_t & any_n
-    uni_taken = is_bra & any_t & ~any_n
-
-    # pushes: SSY pushes (RECONV, reconv_addr, current mask);
-    # a divergent BRA pushes (TAKEN, target, taken mask) — not-taken first.
-    do_push = diverge | is_ssy
-    push_type = jnp.where(is_ssy, isa.STACK_RECONV, isa.STACK_TAKEN)
-    push_mask = _pack(jnp.where(is_ssy, part, taken))
-    slot = jnp.clip(sp_w, 0, cfg.warp_stack_depth - 1)
-    stack_addr = st.stack_addr.at[w, slot].set(
-        jnp.where(do_push, imm, st.stack_addr[w, slot]))
-    stack_type = st.stack_type.at[w, slot].set(
-        jnp.where(do_push, push_type, st.stack_type[w, slot]))
-    stack_mask = st.stack_mask.at[w, slot].set(
-        jnp.where(do_push, push_mask, st.stack_mask[w, slot]))
-    overflow_now = do_push & (sp_w >= cfg.warp_stack_depth)
-    sp_new = sp_w + jnp.where(do_push, 1, 0)
-
-    # ---- EXIT ------------------------------------------------------------
-    is_exit = (op == isa.EXIT) & exec_this
-    alive_new = jnp.where(is_exit, alive_w & ~exec_mask, alive_w)
-    warp_done = is_exit & ~jnp.any(alive_new)
-    # EXIT with survivors resumes a pending path from the stack
-    exit_resume = is_exit & ~warp_done & (sp_new > 0)
-    etop = jnp.maximum(sp_new - 1, 0)
-    e_addr = stack_addr[w, etop]
-    e_type = stack_type[w, etop]
-    e_mask = _unpack(stack_mask[w, etop])
-    sp_new = sp_new - jnp.where(exit_resume, 1, 0)
-    active_new = jnp.where(
-        exit_resume, e_mask & alive_new,
-        jnp.where(diverge, ntk,
-                  jnp.where(is_exit, alive_new, active_w)))
-
-    # ---- next PC ----------------------------------------------------------
-    resume_jump = exit_resume & (e_type == isa.STACK_TAKEN)
-    pc_next = jnp.where(
-        pop_taken, top_addr,
-        jnp.where(uni_taken, imm,
-                  jnp.where(resume_jump, e_addr, pc_w + 1)))
-    # BAR: wait at the *next* instruction
-    is_bar = (op == isa.BAR) & exec_this
-    wstate_w = jnp.where(warp_done, FINISHED,
-                         jnp.where(is_bar, WAIT, wstate[w]))
-
-    # ---- counters / cycle cost -------------------------------------------
-    is_gmem = (op == isa.LDG) | (op == isa.STG)
-    is_smem = (op == isa.LDS) | (op == isa.STS)
-    cost = jnp.where(
-        exec_this,
-        cfg.rows_per_warp
-        + jnp.where(is_gmem, cfg.mem_latency_global, 0)
-        + jnp.where(is_smem, cfg.mem_latency_shared, 0),
-        1)                                   # a TAKEN pop costs one cycle
-    c = st.counters
-    op_c = jnp.where(exec_this, op, isa.NOP)
-    counters = Counters(
-        op_issues=c.op_issues.at[op_c].add(jnp.where(exec_this, 1, 0)),
-        op_lanes=c.op_lanes.at[op_c].add(
-            jnp.sum(exec_mask).astype(jnp.int32)),
-        cycles=c.cycles + cost,
-        stack_ops=c.stack_ops + do_push.astype(jnp.int32)
-        + do_pop.astype(jnp.int32) + exit_resume.astype(jnp.int32),
-        max_sp=jnp.maximum(c.max_sp, sp_new),
-        overflow=c.overflow | overflow_now.astype(jnp.int32))
-
-    return SMState(
-        pc=st.pc.at[w].set(pc_next),
-        alive=st.alive.at[w].set(alive_new),
-        active=st.active.at[w].set(active_new),
-        wstate=wstate.at[w].set(wstate_w),
-        stack_addr=stack_addr, stack_type=stack_type, stack_mask=stack_mask,
-        sp=st.sp.at[w].set(sp_new),
-        pred=pred, regs=regs, smem=smem, gmem=gmem, gw=gwrt,
-        last_warp=w, counters=counters)
-
-
-@functools.partial(jax.jit, static_argnums=(0, 2))
-def _run_block_jit(cfg: MachineConfig, code: jnp.ndarray, block_dim: int,
-                   block_dim_xy: jnp.ndarray, block_xy: jnp.ndarray,
-                   grid_xy: jnp.ndarray, gmem: jnp.ndarray):
-    n_warps = -(-block_dim // isa.WARP_SIZE)
-    lut = jnp.asarray(isa.COND_LUT)
-    st0 = _init_state(cfg, n_warps, block_dim, gmem)
-
-    def cond(st: SMState):
-        return jnp.any(st.wstate != FINISHED) & \
-            (st.counters.cycles < cfg.max_cycles)
-
-    body = functools.partial(_issue, cfg, code, lut, block_dim_xy,
-                             block_xy, grid_xy)
-    st = jax.lax.while_loop(cond, body, st0)
-    return st.gmem[:-1], st.gw[:-1], st.counters
-
-
-def run_block(code, block_dim: int, block_xy, grid_xy, gmem,
-              cfg: MachineConfig = MachineConfig()):
-    """Execute one thread block; returns (gmem, written-mask, Counters).
-
-    ``block_dim`` may be an int (1-D block) or an (x, y) tuple.
-    """
-    if isinstance(block_dim, tuple):
-        bdx, bdy = block_dim
-    else:
-        bdx, bdy = block_dim, 1
-    return _run_block_jit(
-        cfg, jnp.asarray(code, jnp.int32), bdx * bdy,
-        jnp.asarray([bdx, bdy], jnp.int32),
-        jnp.asarray(block_xy, jnp.int32),
-        jnp.asarray(grid_xy, jnp.int32),
-        jnp.asarray(gmem, jnp.int32))
+# Back-compat alias for the seed's private initializer name.
+_init_state = init_state

@@ -1,0 +1,102 @@
+"""The FlexGrip-JAX streaming multiprocessor as a five-stage package.
+
+The paper's SM pipeline — Fetch/Decode, Read, Execute, Write plus the
+control unit — is one module per stage:
+
+* :mod:`fetch_decode` — barrier release, all-warp instruction fetch,
+  field decode, ``.S`` reconvergence pop;
+* :mod:`read`         — operand units, guard LUT, S2R, memory read ports;
+* :mod:`execute`      — the pluggable SP-array backend (pure jnp or the
+  Pallas ``simt_alu`` VPU kernel);
+* :mod:`write`        — register/predicate writeback, global/shared
+  stores;
+* :mod:`control`      — warp stack, EXIT/BAR, next PC, counters;
+* :mod:`reference`    — the seed one-warp-per-issue interpreter, kept as
+  the equivalence oracle (``execute_backend="reference"``).
+
+Issue discipline: where the seed interpreter issued ONE warp per
+``lax.while_loop`` iteration, :func:`sm_step` issues the instruction of
+EVERY ready warp simultaneously over the (W, 32) lane grid — the
+lockstep all-warp pipeline that keeps the vector substrate busy, while
+per-warp cycle accounting still charges the seed's serialized-issue
+cost so paper-faithful timing is unchanged (see :mod:`control`).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .. import isa
+from .state import (EXECUTE_BACKENDS, FINISHED, READY, WAIT, Counters,
+                    MachineConfig, SMState, _BITS, _LANES, _pack, _unpack,
+                    init_state)
+from .fetch_decode import Decoded, fetch_decode
+from .read import Operands, read_operands
+from .execute import EXECUTE_STAGE_BACKENDS, execute
+from .write import write_back
+from .control import control
+from .reference import issue_one_warp
+
+__all__ = [
+    "EXECUTE_BACKENDS", "EXECUTE_STAGE_BACKENDS", "READY", "WAIT",
+    "FINISHED", "Counters", "Decoded", "MachineConfig", "Operands",
+    "SMState", "sm_step", "issue_one_warp", "init_state", "run_block",
+    "_run_block_jit", "_BITS", "_LANES", "_pack", "_unpack",
+]
+
+
+def sm_step(cfg: MachineConfig, code: jnp.ndarray, lut: jnp.ndarray,
+            block_dim_xy: jnp.ndarray, block_xy: jnp.ndarray,
+            grid_xy: jnp.ndarray, st: SMState) -> SMState:
+    """One lockstep step: every READY warp runs the full pipeline."""
+    dec = fetch_decode(code, st)
+    ops = read_operands(cfg, lut, block_dim_xy, block_xy, grid_xy, st, dec)
+    result, nib_new = execute(cfg, dec, ops)
+    wb = write_back(cfg, st, dec, ops, result, nib_new)
+    (pc, alive, active, wstate, stack_addr, stack_type, stack_mask, sp,
+     counters) = control(cfg, st, dec, ops)
+    return SMState(
+        pc=pc, alive=alive, active=active, wstate=wstate,
+        stack_addr=stack_addr, stack_type=stack_type,
+        stack_mask=stack_mask, sp=sp,
+        pred=wb.pred, regs=wb.regs, smem=wb.smem, gmem=wb.gmem, gw=wb.gw,
+        last_warp=st.last_warp, counters=counters)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 2))
+def _run_block_jit(cfg: MachineConfig, code: jnp.ndarray, block_dim: int,
+                   block_dim_xy: jnp.ndarray, block_xy: jnp.ndarray,
+                   grid_xy: jnp.ndarray, gmem: jnp.ndarray):
+    n_warps = -(-block_dim // isa.WARP_SIZE)
+    lut = jnp.asarray(isa.COND_LUT)
+    st0 = init_state(cfg, n_warps, block_dim, gmem)
+
+    def cond(st: SMState):
+        return jnp.any(st.wstate != FINISHED) & \
+            (st.counters.cycles < cfg.max_cycles)
+
+    step = issue_one_warp if cfg.execute_backend == "reference" else sm_step
+    body = functools.partial(step, cfg, code, lut, block_dim_xy,
+                             block_xy, grid_xy)
+    st = jax.lax.while_loop(cond, body, st0)
+    return st.gmem[:-1], st.gw[:-1], st.counters
+
+
+def run_block(code, block_dim: int, block_xy, grid_xy, gmem,
+              cfg: MachineConfig = MachineConfig()):
+    """Execute one thread block; returns (gmem, written-mask, Counters).
+
+    ``block_dim`` may be an int (1-D block) or an (x, y) tuple.
+    """
+    if isinstance(block_dim, tuple):
+        bdx, bdy = block_dim
+    else:
+        bdx, bdy = block_dim, 1
+    return _run_block_jit(
+        cfg, jnp.asarray(code, jnp.int32), bdx * bdy,
+        jnp.asarray([bdx, bdy], jnp.int32),
+        jnp.asarray(block_xy, jnp.int32),
+        jnp.asarray(grid_xy, jnp.int32),
+        jnp.asarray(gmem, jnp.int32))

@@ -1,0 +1,88 @@
+"""Fetch/Decode stage of the all-warp pipeline.
+
+One lockstep step fetches the instruction at *every* READY warp's PC in
+a single gather from the (runtime-data!) program array and decodes all
+field slots as (W,) vectors.  Barrier release is folded in front of the
+fetch exactly as in the seed interpreter: when no warp is READY, every
+BAR-waiting warp wakes in the same step.
+
+The ``.S``-flagged reconvergence pop (paper §4.1 / Fig. 2) is part of
+decode: a popped TAKEN entry redirects the warp and suppresses execution
+for this issue (``exec_this``); a popped RECONV entry restores the
+pre-divergence mask and lets the instruction execute in the same issue.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from .. import isa
+from .state import READY, WAIT, SMState, _unpack
+
+
+class Decoded(NamedTuple):
+    """Per-warp decoded issue bundle; every field is a (W,) vector except
+    the (W, 32) ``active`` lane mask updated by the sync pop."""
+    issued: jnp.ndarray      # (W,) bool — warp issues this step
+    wstate: jnp.ndarray      # (W,) int32 — after barrier release
+    op: jnp.ndarray
+    dst: jnp.ndarray
+    src1: jnp.ndarray
+    src2: jnp.ndarray
+    src3: jnp.ndarray
+    imm: jnp.ndarray
+    flags: jnp.ndarray
+    gpred: jnp.ndarray
+    gcond: jnp.ndarray
+    pdst: jnp.ndarray
+    guarded: jnp.ndarray     # (W,) bool
+    active: jnp.ndarray      # (W, 32) bool — after reconvergence pop
+    sp: jnp.ndarray          # (W,) int32 — after reconvergence pop
+    exec_this: jnp.ndarray   # (W,) bool — instruction actually executes
+    pop_taken: jnp.ndarray   # (W,) bool — TAKEN pop consumed the issue
+    do_pop: jnp.ndarray      # (W,) bool
+    top_addr: jnp.ndarray    # (W,) int32 — popped entry's address
+
+
+def fetch_decode(code: jnp.ndarray, st: SMState) -> Decoded:
+    W = st.pc.shape[0]
+    arange_w = jnp.arange(W, dtype=jnp.int32)
+
+    # ---- barrier release: if nothing is ready, wake all BAR waiters
+    ready = st.wstate == READY
+    none_ready = ~jnp.any(ready)
+    wstate = jnp.where(none_ready & (st.wstate == WAIT), READY, st.wstate)
+    issued = wstate == READY
+
+    # ---- Fetch: one gather for every warp's PC
+    instr = code[st.pc]                                  # (W, NUM_FIELDS)
+
+    # ---- Decode
+    op = instr[:, isa.F_OP]
+    flags = instr[:, isa.F_FLAGS]
+
+    # ---- reconvergence-point pop (.S), §4.1 / Fig. 2 ------------------
+    top = jnp.maximum(st.sp - 1, 0)
+    top_addr = st.stack_addr[arange_w, top]
+    top_type = st.stack_type[arange_w, top]
+    top_mask = _unpack(st.stack_mask[arange_w, top])     # (W, 32)
+    do_pop = issued & ((flags & isa.FLAG_SYNC) != 0) & (st.sp > 0)
+    pop_taken = do_pop & (top_type == isa.STACK_TAKEN)
+    # TAKEN pop: jump to the stored taken address with the stored mask and
+    # spend this cycle on the jump.  RECONV pop: restore the pre-divergence
+    # mask and execute this instruction in the same issue.
+    active = jnp.where(do_pop[:, None], top_mask, st.active)
+    sp = st.sp - jnp.where(do_pop, 1, 0)
+    exec_this = issued & ~pop_taken
+
+    return Decoded(
+        issued=issued, wstate=wstate, op=op,
+        dst=instr[:, isa.F_DST], src1=instr[:, isa.F_SRC1],
+        src2=instr[:, isa.F_SRC2], src3=instr[:, isa.F_SRC3],
+        imm=instr[:, isa.F_IMM], flags=flags,
+        gpred=instr[:, isa.F_GPRED], gcond=instr[:, isa.F_GCOND],
+        pdst=instr[:, isa.F_PDST],
+        guarded=(flags & isa.FLAG_GUARD) != 0,
+        active=active, sp=sp, exec_this=exec_this, pop_taken=pop_taken,
+        do_pop=do_pop, top_addr=top_addr)

@@ -1,0 +1,68 @@
+"""Write stage of the all-warp pipeline.
+
+Commits one lockstep issue for every warp at once: register-file and
+predicate-file writebacks are (W, 32) masked column scatters; global and
+shared stores from all warps flatten to one scatter each, with inactive
+lanes redirected to the sentinel word (they rewrite its current value,
+so the scatter needs no branch).  Cross-warp stores to the same address
+are resolved in scatter order, matching the seed's issue-order
+resolution for the race-free programs the paper targets (CUDA gives no
+stronger guarantee either).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from .. import isa
+from .state import MachineConfig, SMState, _LANES
+from .fetch_decode import Decoded
+from .read import Operands
+
+class Written(NamedTuple):
+    regs: jnp.ndarray
+    pred: jnp.ndarray
+    smem: jnp.ndarray
+    gmem: jnp.ndarray
+    gw: jnp.ndarray
+
+
+def write_back(cfg: MachineConfig, st: SMState, dec: Decoded,
+               ops: Operands, result: jnp.ndarray,
+               nib_new: jnp.ndarray) -> Written:
+    W = st.pc.shape[0]
+    G = st.gmem.shape[0] - 1
+    arange_w = jnp.arange(W, dtype=jnp.int32)
+
+    # ---- register writeback (opcode-class table lookup, one gather) ----
+    has_dst = jnp.asarray(isa.WRITES_REG)[dec.op]        # (W,) bool
+    wr = ops.exec_mask & has_dst[:, None]
+    old_dcol = jnp.take_along_axis(st.regs, dec.dst[:, None, None],
+                                   axis=2)[..., 0]
+    new_dcol = jnp.where(wr, result, old_dcol)
+    regs = st.regs.at[arange_w[:, None], _LANES[None, :],
+                      dec.dst[:, None]].set(new_dcol)
+
+    # ---- predicate writeback -------------------------------------------
+    is_setp = dec.op == isa.ISETP
+    old_pcol = jnp.take_along_axis(st.pred, dec.pdst[:, None, None],
+                                   axis=2)[..., 0]
+    new_pcol = jnp.where(ops.exec_mask & is_setp[:, None], nib_new,
+                         old_pcol)
+    pred = st.pred.at[arange_w[:, None], _LANES[None, :],
+                      dec.pdst[:, None]].set(new_pcol)
+
+    # global / shared stores (inactive lanes write the sentinel word)
+    st_g = ops.exec_mask & (dec.op == isa.STG)[:, None]
+    gidx = jnp.where(st_g, ops.gaddr, G).ravel()
+    gval = jnp.where(st_g, ops.s2, st.gmem[G]).ravel()
+    gmem = st.gmem.at[gidx].set(gval)
+    gwrt = st.gw.at[gidx].set(st.gw[gidx] | st_g.ravel())
+
+    st_s = ops.exec_mask & (dec.op == isa.STS)[:, None]
+    sidx = jnp.where(st_s, ops.saddr, cfg.smem_words).ravel()
+    sval = jnp.where(st_s, ops.s2, st.smem[cfg.smem_words]).ravel()
+    smem = st.smem.at[sidx].set(sval)
+
+    return Written(regs=regs, pred=pred, smem=smem, gmem=gmem, gw=gwrt)

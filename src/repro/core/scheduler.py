@@ -11,6 +11,15 @@ The paper's block scheduler assigns thread blocks to SMs round-robin
   multi-SM kernel time is ``max over SMs of (sum of its blocks' cycles)``
   under round-robin assignment, plus a per-block scheduling overhead.
 
+The grid loop is **device-resident**: each jitted chunk runs its blocks
+under ``vmap`` and then merges their write sets into the carried global
+memory with a masked ``lax.scan`` (later blocks win, preserving the
+block-order resolution CUDA-race-free kernels never observe).  Global
+memory never round-trips to the host between chunks — the seed's
+per-block host ``np.where`` merge, which dominated wall-clock at large
+grids (O(n_blocks × gmem) host traffic), is gone; only the small
+per-chunk counter arrays are fetched.
+
 The same blocks→SMs round-robin map reappears at cluster scale as the
 data-parallel shard assignment in :mod:`repro.launch.mesh` — the paper's
 scheduling idea lifted from SMs to chips (DESIGN.md §4).
@@ -36,7 +45,7 @@ class GridResult(NamedTuple):
     gmem: np.ndarray            # final global memory
     cycles_per_block: np.ndarray
     op_issues: np.ndarray       # (NUM_OPCODES,) int64, summed over blocks
-    op_lanes: np.ndarray        # (NUM_OPCODES,) int64
+    op_lanes: np.ndarray       # (NUM_OPCODES,) int64
     stack_ops: int
     max_sp: int
     overflow: bool
@@ -51,10 +60,21 @@ class GridResult(NamedTuple):
 
 @functools.partial(jax.jit, static_argnums=(0, 2))
 def _run_chunk(cfg, code, block_dim, block_dim_xy, block_xys, grid_xy, gmem):
-    """vmap a chunk of blocks over identical initial global memory."""
+    """Run a chunk of blocks over identical initial global memory and
+    merge their write sets on device.  Returns (merged gmem, Counters
+    stacked over the chunk's blocks)."""
     run = lambda bxy: _run_block_jit(cfg, code, block_dim, block_dim_xy,
                                      bxy, grid_xy, gmem)
-    return jax.vmap(run)(block_xys)
+    mem_out, written, ctr = jax.vmap(run)(block_xys)
+
+    # masked scan merge: later blocks overwrite earlier ones, matching
+    # the seed's sequential block-order np.where resolution
+    def merge_one(acc, mw):
+        mem, wrt = mw
+        return jnp.where(wrt, mem, acc), None
+
+    merged, _ = jax.lax.scan(merge_one, gmem, (mem_out, written))
+    return merged, ctr
 
 
 def run_grid(code, grid: Tuple[int, int], block_dim, gmem,
@@ -75,31 +95,30 @@ def run_grid(code, grid: Tuple[int, int], block_dim, gmem,
     bxys = np.stack([xs.ravel(), ys.ravel()], 1).astype(np.int32)
     n_blocks = len(bxys)
 
-    gmem = np.asarray(gmem, np.int32)
-    cycles = np.zeros(n_blocks, np.int64)
-    op_issues = np.zeros(isa.NUM_OPCODES, np.int64)
-    op_lanes = np.zeros(isa.NUM_OPCODES, np.int64)
-    stack_ops, max_sp, overflow = 0, 0, False
-
     code = jnp.asarray(code, jnp.int32)
     bdxy = jnp.asarray([bdx, bdy], jnp.int32)
     gxy = jnp.asarray([gx, gy], jnp.int32)
 
+    # device-resident grid state: gmem stays on device across chunks
+    gmem_dev = jnp.asarray(gmem, jnp.int32)
+    chunk_ctrs = []
     for lo in range(0, n_blocks, chunk):
         hi = min(lo + chunk, n_blocks)
-        mem_out, written, ctr = _run_chunk(
-            cfg, code, bdx * bdy, bdxy, jnp.asarray(bxys[lo:hi]), gxy,
-            jnp.asarray(gmem))
-        mem_out = np.asarray(mem_out)
-        written = np.asarray(written)
-        for j in range(hi - lo):
-            gmem = np.where(written[j], mem_out[j], gmem).astype(np.int32)
-        cycles[lo:hi] = np.asarray(ctr.cycles, np.int64)
-        op_issues += np.asarray(ctr.op_issues, np.int64).sum(0)
-        op_lanes += np.asarray(ctr.op_lanes, np.int64).sum(0)
-        stack_ops += int(np.asarray(ctr.stack_ops, np.int64).sum())
-        max_sp = max(max_sp, int(np.asarray(ctr.max_sp).max()))
-        overflow |= bool(np.asarray(ctr.overflow).any())
+        gmem_dev, ctr = _run_chunk(cfg, code, bdx * bdy, bdxy,
+                                   jnp.asarray(bxys[lo:hi]), gxy, gmem_dev)
+        chunk_ctrs.append(ctr)
 
-    return GridResult(gmem, cycles, op_issues, op_lanes, stack_ops,
-                      max_sp, overflow)
+    cycles = np.concatenate(
+        [np.asarray(c.cycles, np.int64) for c in chunk_ctrs])
+    op_issues = np.zeros(isa.NUM_OPCODES, np.int64)
+    op_lanes = np.zeros(isa.NUM_OPCODES, np.int64)
+    stack_ops, max_sp, overflow = 0, 0, False
+    for c in chunk_ctrs:
+        op_issues += np.asarray(c.op_issues, np.int64).sum(0)
+        op_lanes += np.asarray(c.op_lanes, np.int64).sum(0)
+        stack_ops += int(np.asarray(c.stack_ops, np.int64).sum())
+        max_sp = max(max_sp, int(np.asarray(c.max_sp).max()))
+        overflow |= bool(np.asarray(c.overflow).any())
+
+    return GridResult(np.asarray(gmem_dev), cycles, op_issues, op_lanes,
+                      stack_ops, max_sp, overflow)

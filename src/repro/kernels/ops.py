@@ -18,8 +18,11 @@ from . import ref
 INTERPRET = jax.default_backend() != "tpu"
 
 
-def simt_alu(op, imm, s1, s2, s3, mask, *, enable_mul=True):
-    return _sa.simt_alu(op, imm, s1, s2, s3, mask, enable_mul=enable_mul,
+def simt_alu(op, s1, s2, s3, cond, s2r, mask, *, enable_mul=True,
+             num_read_operands=3):
+    return _sa.simt_alu(op, s1, s2, s3, cond, s2r, mask,
+                        enable_mul=enable_mul,
+                        num_read_operands=num_read_operands,
                         interpret=INTERPRET)
 
 

@@ -9,12 +9,23 @@ MXU is useless for 32-bit integer ALU work, so this is a VPU kernel.
 
 The kernel evaluates a *batch* of decoded instructions (one per warp
 row) in one launch: operands are pre-gathered (the Read stage), the
-kernel applies the per-warp opcode/immediate lanes-wide, and returns
-results plus ISETP predicate nibbles.  Block shape is (WARP_TILE, 128):
-lanes padded 32 -> 128 to fill a VPU register row.
+kernel applies the per-warp opcode lanes-wide, and returns results plus
+ISETP predicate nibbles.  Beyond the plain ALU ops it covers the
+operand-select instructions — ISET (guard-LUT bit), SELP (predicated
+select), S2R (special-register read) — whose selected operands arrive
+pre-evaluated as the ``cond`` / ``s2r`` lane inputs, so the full
+register-writing datapath minus the memory ports runs in one kernel.
+This is the execute backend the all-warp pipeline selects with
+``MachineConfig.execute_backend="pallas"``.
 
-ref.py holds the pure-jnp oracle; tests sweep opcode x shape x dtype in
-interpret mode (CPU executes the kernel body).
+Customization axes (paper §4.2) are static kernel parameters:
+``enable_mul`` removes the multiplier datapath (IMUL/IMAD produce 0,
+XLA dead-code-eliminates the multiplies) and ``num_read_operands < 3``
+removes the third read port, so IMAD's s3 addend contributes nothing.
+
+Block shape is (WARP_TILE, 128): lanes padded 32 -> 128 to fill a VPU
+register row.  ref.py holds the pure-jnp oracle; tests sweep
+opcode x shape in interpret mode (CPU executes the kernel body).
 """
 from __future__ import annotations
 
@@ -30,20 +41,24 @@ LANE_TILE = 128     # pad 32 lanes to one full VPU row
 WARP_TILE = 8       # warps per block
 
 
-def _alu_kernel(op_ref, imm_ref, s1_ref, s2_ref, s3_ref, mask_ref,
-                out_ref, nib_ref, *, enable_mul: bool):
-    """One block: (WARP_TILE, LANE_TILE) lanes, per-warp op/imm."""
+def _alu_kernel(op_ref, s1_ref, s2_ref, s3_ref, cond_ref, s2r_ref,
+                mask_ref, out_ref, nib_ref, *, enable_mul: bool,
+                num_read_operands: int):
+    """One block: (WARP_TILE, LANE_TILE) lanes, per-warp op."""
     s1 = s1_ref[...]
     s2 = s2_ref[...]
     s3 = s3_ref[...]
+    cond = cond_ref[...] != 0
+    s2r = s2r_ref[...]
     mask = mask_ref[...] != 0
     op = op_ref[...]          # (WARP_TILE, 1) int32, broadcast over lanes
-    imm = imm_ref[...]
 
     sh = s2 & 31
     u1 = s1.astype(jnp.uint32)
     mul = (s1 * s2) if enable_mul else jnp.zeros_like(s1)
-    mad = (s1 * s2 + s3) if enable_mul else jnp.zeros_like(s1)
+    # IMAD needs both the multiplier and the third read port (§4.2)
+    mad = (s1 * s2 + s3) if (enable_mul and num_read_operands >= 3) \
+        else jnp.zeros_like(s1)
 
     def sel(code, val, default):
         return jnp.where(op == code, val, default)
@@ -64,7 +79,9 @@ def _alu_kernel(op_ref, imm_ref, s1_ref, s2_ref, s3_ref, mask_ref,
     res = sel(isa.SHL, (u1 << sh.astype(jnp.uint32)).astype(jnp.int32), res)
     res = sel(isa.SHR, (u1 >> sh.astype(jnp.uint32)).astype(jnp.int32), res)
     res = sel(isa.SAR, s1 >> sh, res)
-    res = sel(isa.MOV + 100, imm, res)  # unreachable; keeps imm live
+    res = sel(isa.ISET, cond.astype(jnp.int32), res)
+    res = sel(isa.SELP, jnp.where(cond, s1, s2), res)
+    res = sel(isa.S2R, s2r, res)
 
     # ISETP flag nibble (sign, zero, carry, overflow) of s1 - s2
     d = s1 - s2
@@ -74,37 +91,40 @@ def _alu_kernel(op_ref, imm_ref, s1_ref, s2_ref, s3_ref, mask_ref,
     f_o = (((s1 ^ s2) & (s1 ^ d)) < 0).astype(jnp.int32)
     nib = f_s | (f_z << 1) | (f_c << 2) | (f_o << 3)
 
-    out_ref[...] = jnp.where(mask, res, s1 * 0)
+    out_ref[...] = jnp.where(mask, res, 0)
     nib_ref[...] = jnp.where(mask & (op == isa.ISETP), nib, 0)
 
 
-@functools.partial(jax.jit, static_argnames=("enable_mul", "interpret"))
-def simt_alu(op, imm, s1, s2, s3, mask, *, enable_mul: bool = True,
-             interpret: bool = False):
+@functools.partial(jax.jit, static_argnames=("enable_mul",
+                                             "num_read_operands",
+                                             "interpret"))
+def simt_alu(op, s1, s2, s3, cond, s2r, mask, *, enable_mul: bool = True,
+             num_read_operands: int = 3, interpret: bool = False):
     """Vector execute stage.
 
-    op/imm: (W,) int32 per warp; s1/s2/s3/mask: (W, LANES) int32.
-    Returns (result (W, LANES) int32, isetp nibble (W, LANES) int32).
+    op: (W,) int32 per warp; s1/s2/s3/cond/s2r/mask: (W, LANES) int32.
+    Returns (result (W, LANES) int32, isetp nibble (W, LANES) int32);
+    both are zero outside ``mask``.
     """
     W, LANES = s1.shape
     Wp = (W + WARP_TILE - 1) // WARP_TILE * WARP_TILE
 
-    def pad(x, fill=0):
-        return jnp.pad(x, ((0, Wp - W), (0, LANE_TILE - LANES)),
-                       constant_values=fill)
+    def pad(x):
+        return jnp.pad(x.astype(jnp.int32),
+                       ((0, Wp - W), (0, LANE_TILE - LANES)))
 
     opp = jnp.pad(op, (0, Wp - W))[:, None]
-    immp = jnp.pad(imm, (0, Wp - W))[:, None]
     grid = (Wp // WARP_TILE,)
     wspec = pl.BlockSpec((WARP_TILE, 1), lambda i: (i, 0))
     lspec = pl.BlockSpec((WARP_TILE, LANE_TILE), lambda i: (i, 0))
     out, nib = pl.pallas_call(
-        functools.partial(_alu_kernel, enable_mul=enable_mul),
+        functools.partial(_alu_kernel, enable_mul=enable_mul,
+                          num_read_operands=num_read_operands),
         grid=grid,
-        in_specs=[wspec, wspec, lspec, lspec, lspec, lspec],
+        in_specs=[wspec, lspec, lspec, lspec, lspec, lspec, lspec],
         out_specs=[lspec, lspec],
         out_shape=[jax.ShapeDtypeStruct((Wp, LANE_TILE), jnp.int32),
                    jax.ShapeDtypeStruct((Wp, LANE_TILE), jnp.int32)],
         interpret=interpret,
-    )(opp, immp, pad(s1), pad(s2), pad(s3), pad(mask))
+    )(opp, pad(s1), pad(s2), pad(s3), pad(cond), pad(s2r), pad(mask))
     return out[:W, :LANES], nib[:W, :LANES]

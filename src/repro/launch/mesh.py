@@ -19,12 +19,30 @@ SM-level original; this module is the same policy at fleet scale.
 """
 from __future__ import annotations
 
+import contextlib
 import re
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def use_mesh(mesh: Mesh):
+    """Version-portable ``with use_mesh(mesh):`` context.
+
+    ``jax.set_mesh`` was removed/renamed across JAX releases
+    (``jax.sharding.use_mesh`` in newer ones); on versions predating
+    both, a ``Mesh`` is itself a context manager that installs the
+    resource environment.  All call sites go through this one shim.
+    """
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    if hasattr(jax.sharding, "use_mesh"):
+        return jax.sharding.use_mesh(mesh)
+    if hasattr(mesh, "__enter__"):
+        return mesh
+    return contextlib.nullcontext(mesh)
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:

@@ -58,7 +58,7 @@ def main(argv=None):
     _, jit_for, (psh, osh) = build_train_step(spec, mesh, opt_cfg)
 
     key = jax.random.key(args.seed)
-    with jax.set_mesh(mesh):
+    with M.use_mesh(mesh):
         params = api.init(key, spec)
         opt_state = opt_init(params, opt_cfg)
 

@@ -1,7 +1,10 @@
 """ISA encode/decode + condition-LUT properties."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis",
+                    reason="property tests need the hypothesis extra")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import asm, isa
 

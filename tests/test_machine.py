@@ -7,7 +7,10 @@ structured divergent programs (nested if/else with proper SSY scoping).
 """
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis",
+                    reason="property tests need the hypothesis extra")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import asm, customize, isa, machine
 from repro.core.machine import MachineConfig

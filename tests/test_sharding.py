@@ -91,7 +91,7 @@ def test_train_step_runs_on_debug_mesh(prod_mesh):
     opt_cfg = OptConfig(lr=1e-3)
     _, jit_for, _ = build_train_step(spec, prod_mesh, opt_cfg,
                                      donate=False)
-    with jax.set_mesh(prod_mesh):
+    with M.use_mesh(prod_mesh):
         params = api.init(jax.random.key(0), spec)
         opt_state = opt_init(params, opt_cfg)
         B, S = 4, 32
