@@ -43,7 +43,8 @@ __all__ = [
     "EXECUTE_BACKENDS", "EXECUTE_STAGE_BACKENDS", "READY", "WAIT",
     "FINISHED", "Counters", "Decoded", "MachineConfig", "Operands",
     "SMState", "sm_step", "issue_one_warp", "init_state", "run_block",
-    "_run_block_jit", "_BITS", "_LANES", "_pack", "_unpack",
+    "run_block_body", "_run_block_jit", "_BITS", "_LANES", "_pack",
+    "_unpack",
 ]
 
 
@@ -65,11 +66,17 @@ def sm_step(cfg: MachineConfig, code: jnp.ndarray, lut: jnp.ndarray,
         last_warp=st.last_warp, counters=counters)
 
 
-@functools.partial(jax.jit, static_argnums=(0, 2))
-def _run_block_jit(cfg: MachineConfig, code: jnp.ndarray, block_dim: int,
-                   block_dim_xy: jnp.ndarray, block_xy: jnp.ndarray,
-                   grid_xy: jnp.ndarray, gmem: jnp.ndarray):
-    n_warps = -(-block_dim // isa.WARP_SIZE)
+def run_block_body(cfg: MachineConfig, n_warps: int, code, block_dim,
+                   block_dim_xy, block_xy, grid_xy, gmem):
+    """The machine loop: run one block to completion, W static.
+
+    ``block_dim`` may be a Python int or a traced scalar — the device
+    runtime passes it traced so one compiled machine serves any tenant:
+    warps beyond a launch's real thread count initialize FINISHED and
+    never issue, keeping counters bit-exact at any warp padding.
+    Returns ``(gmem, written-mask, Counters)`` with the store-sentinel
+    word stripped.
+    """
     lut = jnp.asarray(isa.COND_LUT)
     st0 = init_state(cfg, n_warps, block_dim, gmem)
 
@@ -82,6 +89,15 @@ def _run_block_jit(cfg: MachineConfig, code: jnp.ndarray, block_dim: int,
                              block_xy, grid_xy)
     st = jax.lax.while_loop(cond, body, st0)
     return st.gmem[:-1], st.gw[:-1], st.counters
+
+
+@functools.partial(jax.jit, static_argnums=(0, 2))
+def _run_block_jit(cfg: MachineConfig, code: jnp.ndarray, block_dim: int,
+                   block_dim_xy: jnp.ndarray, block_xy: jnp.ndarray,
+                   grid_xy: jnp.ndarray, gmem: jnp.ndarray):
+    n_warps = -(-block_dim // isa.WARP_SIZE)
+    return run_block_body(cfg, n_warps, code, block_dim, block_dim_xy,
+                          block_xy, grid_xy, gmem)
 
 
 def run_block(code, block_dim: int, block_xy, grid_xy, gmem,

@@ -5,9 +5,9 @@ predicate-file writebacks are (W, 32) masked column scatters; global and
 shared stores from all warps flatten to one scatter each, with inactive
 lanes redirected to the sentinel word (they rewrite its current value,
 so the scatter needs no branch).  Cross-warp stores to the same address
-are resolved in scatter order, matching the seed's issue-order
-resolution for the race-free programs the paper targets (CUDA gives no
-stronger guarantee either).
+in one step have an implementation-defined winner (XLA scatter with
+duplicate indices) — the CUDA-race semantics the paper's race-free
+programs never observe; CUDA gives no stronger guarantee either.
 """
 from __future__ import annotations
 

@@ -61,29 +61,27 @@ def build(n: int, blocks: int = 1) -> np.ndarray:
     return p.finish(pad_to=PROGRAM_PAD)
 
 
-BLOCKS = 1  # module default: the paper's single-block kernel
+def launch(n: int, blocks: int = 1):
+    return (blocks, 1), (n, 1)
 
 
-def launch(n: int):
-    return (BLOCKS, 1), (n, 1)
+def n_threads(n: int, blocks: int = 1) -> int:
+    return n * blocks
 
 
-def n_threads(n: int) -> int:
-    return n * BLOCKS
-
-
-def make_gmem(rng: np.random.Generator, n: int) -> np.ndarray:
-    g = np.zeros(2 * n * BLOCKS, np.int32)
-    g[:n * BLOCKS] = rng.integers(-10000, 10000, n * BLOCKS,
+def make_gmem(rng: np.random.Generator, n: int,
+              blocks: int = 1) -> np.ndarray:
+    g = np.zeros(2 * n * blocks, np.int32)
+    g[:n * blocks] = rng.integers(-10000, 10000, n * blocks,
                                   dtype=np.int32)
     return g
 
 
-def out_slice(n: int) -> slice:
-    return slice(n * BLOCKS, 2 * n * BLOCKS)
+def out_slice(n: int, blocks: int = 1) -> slice:
+    return slice(n * blocks, 2 * n * blocks)
 
 
-def oracle(gmem0: np.ndarray, n: int) -> np.ndarray:
+def oracle(gmem0: np.ndarray, n: int, blocks: int = 1) -> np.ndarray:
     segs = [np.sort(gmem0[i * n:(i + 1) * n])
-            for i in range(BLOCKS)]
+            for i in range(blocks)]
     return np.concatenate(segs).astype(np.int32)

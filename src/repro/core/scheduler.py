@@ -1,24 +1,22 @@
-"""Block scheduler: grids of thread blocks onto one or more SMs.
+"""Block scheduler — compatibility facade over :mod:`repro.runtime`.
 
 The paper's block scheduler assigns thread blocks to SMs round-robin
 (§4.3); with 2 SMs the workload per SM roughly halves, giving the
-1.77–1.98× scalings of Table 3.  Here:
+1.77–1.98× scalings of Table 3.  Since PR 2 the real implementation is
+the device runtime's multi-SM executor
+(:mod:`repro.runtime.executor`): blocks run in bucketed, compile-once
+dispatch groups under one vmap, write sets merge on device in block
+order, per-SM cycle counters come out of the executed schedule, and
+global memory never round-trips to the host between dispatches.
 
-* functional execution — blocks are data-independent (CUDA semantics for
-  all five paper benchmarks), so we batch them with ``vmap`` in chunks
-  and merge their disjoint global-memory write sets;
-* timing — each block's cycle count comes from its SM run; the
-  multi-SM kernel time is ``max over SMs of (sum of its blocks' cycles)``
-  under round-robin assignment, plus a per-block scheduling overhead.
-
-The grid loop is **device-resident**: each jitted chunk runs its blocks
-under ``vmap`` and then merges their write sets into the carried global
-memory with a masked ``lax.scan`` (later blocks win, preserving the
-block-order resolution CUDA-race-free kernels never observe).  Global
-memory never round-trips to the host between chunks — the seed's
-per-block host ``np.where`` merge, which dominated wall-clock at large
-grids (O(n_blocks × gmem) host traffic), is gone; only the small
-per-chunk counter arrays are fetched.
+This module keeps the historic import surface — ``run_grid``,
+``GridResult``, ``BLOCK_SCHED_OVERHEAD`` — so the energy model,
+benchmarks, examples and tests are agnostic to the runtime refactor.
+``GridResult.sm_cycles(n_sm)`` remains the *analytical* round-robin
+replay; it is bit-exact with the executed per-SM counters of
+:meth:`repro.runtime.DeviceGrid.report` (asserted in
+``tests/test_runtime.py``) and is kept as the post-hoc cross-check that
+works for any ``n_sm`` after a run.
 
 The same blocks→SMs round-robin map reappears at cluster scale as the
 data-parallel shard assignment in :mod:`repro.launch.mesh` — the paper's
@@ -26,99 +24,5 @@ scheduling idea lifted from SMs to chips (DESIGN.md §4).
 """
 from __future__ import annotations
 
-import functools
-from typing import NamedTuple, Tuple
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from . import isa
-from .machine import MachineConfig, _run_block_jit
-
-# Cycles the block scheduler spends dispatching one block (parameter pass,
-# register-file id init — §3.1 "initializes registers ... with thread IDs").
-BLOCK_SCHED_OVERHEAD = 24
-
-
-class GridResult(NamedTuple):
-    gmem: np.ndarray            # final global memory
-    cycles_per_block: np.ndarray
-    op_issues: np.ndarray       # (NUM_OPCODES,) int64, summed over blocks
-    op_lanes: np.ndarray       # (NUM_OPCODES,) int64
-    stack_ops: int
-    max_sp: int
-    overflow: bool
-
-    def sm_cycles(self, n_sm: int) -> int:
-        """Kernel time on ``n_sm`` SMs under round-robin block assignment."""
-        per_sm = np.zeros(n_sm, np.int64)
-        for b, cyc in enumerate(self.cycles_per_block):
-            per_sm[b % n_sm] += int(cyc) + BLOCK_SCHED_OVERHEAD
-        return int(per_sm.max())
-
-
-@functools.partial(jax.jit, static_argnums=(0, 2))
-def _run_chunk(cfg, code, block_dim, block_dim_xy, block_xys, grid_xy, gmem):
-    """Run a chunk of blocks over identical initial global memory and
-    merge their write sets on device.  Returns (merged gmem, Counters
-    stacked over the chunk's blocks)."""
-    run = lambda bxy: _run_block_jit(cfg, code, block_dim, block_dim_xy,
-                                     bxy, grid_xy, gmem)
-    mem_out, written, ctr = jax.vmap(run)(block_xys)
-
-    # masked scan merge: later blocks overwrite earlier ones, matching
-    # the seed's sequential block-order np.where resolution
-    def merge_one(acc, mw):
-        mem, wrt = mw
-        return jnp.where(wrt, mem, acc), None
-
-    merged, _ = jax.lax.scan(merge_one, gmem, (mem_out, written))
-    return merged, ctr
-
-
-def run_grid(code, grid: Tuple[int, int], block_dim, gmem,
-             cfg: MachineConfig = MachineConfig(),
-             chunk: int = 8) -> GridResult:
-    """Execute ``grid`` = (gx, gy) thread blocks of ``block_dim`` threads.
-
-    Blocks may not communicate (true of the paper's benchmarks); their
-    global write sets are merged after each chunk.  Writes to the same
-    address from two blocks in one chunk are resolved in block order.
-    """
-    if isinstance(block_dim, tuple):
-        bdx, bdy = block_dim
-    else:
-        bdx, bdy = block_dim, 1
-    gx, gy = grid
-    xs, ys = np.meshgrid(np.arange(gx), np.arange(gy))
-    bxys = np.stack([xs.ravel(), ys.ravel()], 1).astype(np.int32)
-    n_blocks = len(bxys)
-
-    code = jnp.asarray(code, jnp.int32)
-    bdxy = jnp.asarray([bdx, bdy], jnp.int32)
-    gxy = jnp.asarray([gx, gy], jnp.int32)
-
-    # device-resident grid state: gmem stays on device across chunks
-    gmem_dev = jnp.asarray(gmem, jnp.int32)
-    chunk_ctrs = []
-    for lo in range(0, n_blocks, chunk):
-        hi = min(lo + chunk, n_blocks)
-        gmem_dev, ctr = _run_chunk(cfg, code, bdx * bdy, bdxy,
-                                   jnp.asarray(bxys[lo:hi]), gxy, gmem_dev)
-        chunk_ctrs.append(ctr)
-
-    cycles = np.concatenate(
-        [np.asarray(c.cycles, np.int64) for c in chunk_ctrs])
-    op_issues = np.zeros(isa.NUM_OPCODES, np.int64)
-    op_lanes = np.zeros(isa.NUM_OPCODES, np.int64)
-    stack_ops, max_sp, overflow = 0, 0, False
-    for c in chunk_ctrs:
-        op_issues += np.asarray(c.op_issues, np.int64).sum(0)
-        op_lanes += np.asarray(c.op_lanes, np.int64).sum(0)
-        stack_ops += int(np.asarray(c.stack_ops, np.int64).sum())
-        max_sp = max(max_sp, int(np.asarray(c.max_sp).max()))
-        overflow |= bool(np.asarray(c.overflow).any())
-
-    return GridResult(np.asarray(gmem_dev), cycles, op_issues, op_lanes,
-                      stack_ops, max_sp, overflow)
+from ..runtime.executor import (  # noqa: F401  (re-exported surface)
+    BLOCK_SCHED_OVERHEAD, GridResult, LaunchSpec, execute, run_grid)

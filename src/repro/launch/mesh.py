@@ -56,6 +56,18 @@ def make_debug_mesh(n_devices: int = 1) -> Mesh:
     return jax.make_mesh((1, n_devices), ("data", "model"))
 
 
+def make_sm_mesh(n_sm: int) -> Mesh:
+    """One-axis ``("sm",)`` mesh for the device runtime's block executor.
+
+    The paper's blocks→SMs round-robin, lifted to devices: the runtime's
+    schedule axis shards over up to ``n_sm`` local devices (fewer when
+    the host has fewer — a single-device host degenerates to a no-op
+    placement, which is still the same policy).
+    """
+    n = min(max(1, n_sm), len(jax.devices()))
+    return jax.make_mesh((n,), ("sm",))
+
+
 def batch_axes(mesh: Mesh):
     return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
 

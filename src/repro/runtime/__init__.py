@@ -1,0 +1,38 @@
+"""The device runtime: binary cache, streams/events, multi-SM execution.
+
+CUDA-style runtime layer on top of the SM pipeline, built for the
+serving story the overlay property enables — kernels are data, so one
+resident machine handles many tenants' binaries back-to-back:
+
+* :mod:`registry` — binary cache / module registry: bucketed program
+  padding + content-addressed memoization, so a new tenant binary never
+  retraces the machine;
+* :mod:`executor` — the multi-SM executor: blocks from one or more
+  launches packed round-robin across ``n_sm`` SMs via a batched vmap
+  axis, with per-SM cycle counters coming out of the executed schedule
+  (the analytical replay is kept only as a cross-check);
+* :mod:`stream`  — streams and events: eager async dispatch, in-stream
+  ordering by real dataflow, cross-stream edges via events;
+* :mod:`server`  — the multi-tenant launch queue batching concurrent
+  launches into SM-packed super-steps.
+
+``repro.core.scheduler.run_grid`` is a thin compatibility wrapper over
+:func:`executor.run_grid`, so every pre-runtime benchmark and test
+exercises this path.
+"""
+from .registry import (CODE_BUCKETS, GMEM_MIN_WORDS, Module, ModuleRegistry,
+                       bucket_code_len, bucket_gmem_len, pad_code)
+from .executor import (BLOCK_SCHED_OVERHEAD, LAUNCH_BUCKETS, DeviceGrid,
+                       GridResult, LaunchSpec, MultiSMReport,
+                       bucket_launches, execute, run_grid)
+from .stream import Event, Launch, Runtime, Stream
+from .server import DrainStats, LaunchRequest, RuntimeServer
+
+__all__ = [
+    "BLOCK_SCHED_OVERHEAD", "CODE_BUCKETS", "DeviceGrid", "DrainStats",
+    "Event", "GMEM_MIN_WORDS", "GridResult", "Launch", "LaunchRequest",
+    "LaunchSpec", "LAUNCH_BUCKETS", "Module", "ModuleRegistry",
+    "MultiSMReport", "Runtime", "RuntimeServer", "Stream",
+    "bucket_code_len", "bucket_gmem_len", "bucket_launches", "execute",
+    "pad_code", "run_grid",
+]

@@ -1,0 +1,410 @@
+"""Multi-SM executor: blocks from one or more launches, round-robin SMs.
+
+The paper's block scheduler (§4.3) assigns thread blocks to SMs
+round-robin; Table 3's 1.77–1.98× two-SM scalings follow from
+``max over SMs of (sum of its blocks' cycles)``.  PR 1 replayed that sum
+on the host *after* a functional run; here the schedule is **executed**:
+
+* the global block list — the concatenation of every launch's blocks —
+  is laid out position-major, so position ``p`` runs on SM ``p % n_sm``
+  in super-step ``p // n_sm``;
+* each dispatch runs ``steps_per_dispatch × n_sm`` positions through one
+  ``vmap`` over the flattened (super-step, SM) axis — the batched SM
+  axis of the issue — with a ragged tail padded by masked duplicate
+  blocks so the machine compiles **once** per bucketed shape;
+* per-SM cycle counters accumulate **on device** from the executed
+  blocks (``sm_cyc.at[p % n_sm].add(cycles + overhead)``), replacing the
+  analytical replay, which is kept as :meth:`GridResult.per_sm_cycles`
+  and cross-checked in tests;
+* write sets merge into each launch's global memory in position order —
+  bit-exact with the seed's sequential block-order resolution, which
+  CUDA-race-free kernels never observe anyway.
+
+All array shapes are **bucketed** (code length, gmem words, launch-batch
+width — see :mod:`repro.runtime.registry`), so one trace serves any mix
+of tenant binaries: the overlay property at serving scale.  Global
+memory never round-trips to the host between dispatches, and results
+come back as a device-resident :class:`DeviceGrid` whose host
+materialization is deferred until :meth:`DeviceGrid.to_results`.
+"""
+from __future__ import annotations
+
+import functools
+from typing import List, NamedTuple, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import isa
+from ..core.pipeline import Counters, MachineConfig, run_block_body
+from . import registry as reg
+from .registry import Module, ModuleRegistry
+
+# Cycles the block scheduler spends dispatching one block (parameter pass,
+# register-file id init — §3.1 "initializes registers ... with thread IDs").
+BLOCK_SCHED_OVERHEAD = 24
+
+#: Launch-batch-width buckets: a drain of L concurrent launches pads its
+#: per-launch arrays to the next bucket so the dispatch never retraces on
+#: the number of resident tenants.
+LAUNCH_BUCKETS = (1, 2, 4, 8, 16, 32)
+
+
+def bucket_launches(n: int) -> int:
+    return reg.bucket(n, LAUNCH_BUCKETS, 32)
+
+
+class GridResult(NamedTuple):
+    """Per-launch result: final memory plus the paper's activity counters."""
+    gmem: np.ndarray            # final global memory (original length)
+    cycles_per_block: np.ndarray
+    op_issues: np.ndarray       # (NUM_OPCODES,) int64, summed over blocks
+    op_lanes: np.ndarray        # (NUM_OPCODES,) int64
+    stack_ops: int
+    max_sp: int
+    overflow: bool
+
+    def per_sm_cycles(self, n_sm: int) -> np.ndarray:
+        """Analytical per-SM cycle totals under round-robin assignment.
+
+        Kept as the cross-check for the *executed* counters of
+        :class:`MultiSMReport`.  float64 bincount weights are exact here:
+        totals stay far below 2**53.
+        """
+        cyc = np.asarray(self.cycles_per_block,
+                         np.int64) + BLOCK_SCHED_OVERHEAD
+        sm = np.arange(len(cyc)) % n_sm
+        return np.bincount(sm, weights=cyc,
+                           minlength=n_sm).astype(np.int64)
+
+    def sm_cycles(self, n_sm: int) -> int:
+        """Kernel time on ``n_sm`` SMs under round-robin block assignment."""
+        return int(self.per_sm_cycles(n_sm).max())
+
+
+class MultiSMReport(NamedTuple):
+    """Executed-schedule timing: per-SM counters out of the run itself."""
+    n_sm: int
+    per_sm_cycles: np.ndarray   # (n_sm,) int64 — executed, not replayed
+    n_steps: int                # super-steps in the executed schedule
+    n_blocks: int               # real (non-padding) blocks executed
+
+    @property
+    def kernel_cycles(self) -> int:
+        return int(self.per_sm_cycles.max())
+
+
+class LaunchSpec(NamedTuple):
+    """One kernel launch: binary (or Module), geometry, global memory."""
+    code: Union[np.ndarray, Module]
+    grid: Tuple[int, int]
+    block_dim: Union[int, Tuple[int, int]]
+    gmem: object                # np.ndarray or device jnp.ndarray
+
+
+def _norm_block_dim(block_dim) -> Tuple[int, int]:
+    if isinstance(block_dim, tuple):
+        return block_dim
+    return block_dim, 1
+
+
+def warps_for(block_dim) -> int:
+    """Warps one block of ``block_dim`` threads occupies."""
+    bdx, bdy = _norm_block_dim(block_dim)
+    return -(-bdx * bdy // isa.WARP_SIZE)
+
+
+def _block_positions(grid: Tuple[int, int]) -> np.ndarray:
+    """(gx*gy, 2) block coordinates in the scheduler's launch order."""
+    gx, gy = grid
+    xs, ys = np.meshgrid(np.arange(gx), np.arange(gy))
+    return np.stack([xs.ravel(), ys.ravel()], 1).astype(np.int32)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1),
+                   donate_argnums=(10, 11))  # gmems/sm_cyc update in place
+def _run_positions(cfg: MachineConfig, n_warps: int, codes, bdims, bd_xys,
+                   grid_xys, pos_launch, pos_bxy, pos_valid, sm_ids,
+                   gmems, sm_cyc):
+    """Execute one dispatch group of schedule positions.
+
+    ``codes``/``bdims``/``bd_xys``/``grid_xys``/``gmems`` are stacked
+    per-launch arrays (bucketed L); ``pos_*`` select each position's
+    launch and block.  Blocks run under one vmap over the flattened
+    (super-step, SM) axis, write sets merge in position order, and the
+    per-SM cycle counters accumulate on device.
+    """
+    def run_one(li, bxy):
+        return run_block_body(cfg, n_warps, codes[li], bdims[li],
+                              bd_xys[li], bxy, grid_xys[li], gmems[li])
+
+    mem, wrt, ctr = jax.vmap(run_one)(pos_launch, pos_bxy)
+
+    # masked scan merge: later positions overwrite earlier ones, matching
+    # the sequential block-order resolution; padding positions are inert
+    def merge(acc, x):
+        mem_i, wrt_i, li, valid = x
+        return acc.at[li].set(jnp.where(wrt_i & valid, mem_i, acc[li])), None
+
+    gmems, _ = jax.lax.scan(merge, gmems,
+                            (mem, wrt, pos_launch, pos_valid))
+    # per-SM accumulation in split hi/lo int32 lanes (x64 is disabled, so
+    # there is no device int64): lo adds the low 16 bits, hi the rest.
+    # Exact up to 2**15 blocks per SM per execute() — far beyond any
+    # drain batch — where a single int32 would wrap at ~540 max-length
+    # blocks.  report() recombines to int64.
+    cost = jnp.where(pos_valid, ctr.cycles + BLOCK_SCHED_OVERHEAD, 0)
+    sm_cyc = sm_cyc.at[0, sm_ids].add(cost >> 16) \
+                   .at[1, sm_ids].add(cost & 0xFFFF)
+    return gmems, sm_cyc, ctr
+
+
+def _pad_gmem_device(gmem, width: int) -> jnp.ndarray:
+    """Pad one launch's global memory to its bucket, staying on device."""
+    g = jnp.asarray(gmem, jnp.int32)
+    if g.shape[0] == width:
+        return g
+    return jnp.concatenate(
+        [g, jnp.zeros((width - g.shape[0],), jnp.int32)])
+
+
+class DeviceGrid:
+    """Device-resident results of an executed multi-launch schedule.
+
+    Nothing here forces a host sync: ``launch_gmem`` returns device
+    arrays (usable as the next launch's input — stream chaining), and
+    JAX's async dispatch keeps the host free until ``to_results`` or
+    ``report`` materialize numpy values.
+    """
+
+    def __init__(self, *, gmems, ctrs: Counters, sm_cyc, n_sm: int,
+                 n_steps: int, launch_offsets: Sequence[int],
+                 launch_blocks: Sequence[int], orig_lens: Sequence[int]):
+        self._gmems = gmems              # (L_bucket, G) device
+        self._ctrs = ctrs                # Counters stacked over positions
+        self._sm_cyc = sm_cyc            # (n_sm,) device
+        self.n_sm = n_sm
+        self.n_steps = n_steps
+        self._offsets = list(launch_offsets)
+        self._blocks = list(launch_blocks)
+        self._orig_lens = list(orig_lens)
+        self._gmem_views: dict = {}
+        self._results: Optional[List[GridResult]] = None
+
+    @property
+    def n_launches(self) -> int:
+        return len(self._blocks)
+
+    def launch_gmem(self, i: int) -> jnp.ndarray:
+        """Launch ``i``'s final global memory — device array, no sync.
+
+        Memoized so repeated calls (``done()`` polling, event snapshots)
+        observe one dispatched array rather than re-slicing each time.
+        """
+        if i not in self._gmem_views:
+            self._gmem_views[i] = self._gmems[i, :self._orig_lens[i]]
+        return self._gmem_views[i]
+
+    def block_until_ready(self) -> "DeviceGrid":
+        jax.block_until_ready((self._gmems, self._sm_cyc))
+        return self
+
+    def report(self) -> MultiSMReport:
+        """Executed per-SM cycle counters (host fetch)."""
+        hi_lo = np.asarray(self._sm_cyc, np.int64)
+        return MultiSMReport(
+            n_sm=self.n_sm,
+            per_sm_cycles=(hi_lo[0] << 16) + hi_lo[1],
+            n_steps=self.n_steps,
+            n_blocks=int(sum(self._blocks)))
+
+    def to_results(self) -> List[GridResult]:
+        """Materialize one :class:`GridResult` per launch (host sync)."""
+        if self._results is not None:
+            return self._results
+        c = self._ctrs
+        cycles = np.asarray(c.cycles, np.int64)
+        op_issues = np.asarray(c.op_issues, np.int64)
+        op_lanes = np.asarray(c.op_lanes, np.int64)
+        stack_ops = np.asarray(c.stack_ops, np.int64)
+        max_sp = np.asarray(c.max_sp, np.int64)
+        overflow = np.asarray(c.overflow)
+        out = []
+        for i, (off, nb) in enumerate(zip(self._offsets, self._blocks)):
+            sl = slice(off, off + nb)
+            out.append(GridResult(
+                gmem=np.asarray(self.launch_gmem(i)),
+                cycles_per_block=cycles[sl],
+                op_issues=op_issues[sl].sum(0),
+                op_lanes=op_lanes[sl].sum(0),
+                stack_ops=int(stack_ops[sl].sum()),
+                max_sp=int(max_sp[sl].max()) if nb else 0,
+                overflow=bool(overflow[sl].any())))
+        self._results = out
+        return out
+
+
+def execute(launches: Sequence[LaunchSpec], n_sm: int = 1,
+            cfg: MachineConfig = MachineConfig(), chunk: int = 8,
+            pad_warps: Optional[int] = None,
+            registry: Optional[ModuleRegistry] = None,
+            shard_sm: bool = False) -> DeviceGrid:
+    """Execute the blocks of ``launches`` round-robin across ``n_sm`` SMs.
+
+    Blocks may not communicate (true of the paper's benchmarks); write
+    sets merge in global block order after each dispatch.  ``chunk``
+    bounds the positions per dispatch (rounded to a multiple of
+    ``n_sm``); the ragged tail is padded with masked duplicates of the
+    first block so every dispatch reuses one compiled machine.
+    ``pad_warps`` forces the SM width (the serving path pads all tenants
+    to one width); ``shard_sm`` places the SM axis on local devices via
+    :func:`repro.launch.mesh.make_sm_mesh` when more than one exists.
+    """
+    if not launches:
+        raise ValueError("execute() needs at least one launch")
+    registry = registry or _default_registry
+    mods = [registry.as_module(l.code) for l in launches]
+    code_len = max(m.padded_len for m in mods)
+    n_l = len(launches)
+    l_bucket = bucket_launches(n_l)
+
+    bdims = np.zeros(l_bucket, np.int32)
+    bd_xys = np.zeros((l_bucket, 2), np.int32)
+    grid_xys = np.ones((l_bucket, 2), np.int32)
+    codes = np.zeros((l_bucket, code_len, isa.NUM_FIELDS), np.int32)
+    codes[:, :, isa.F_OP] = isa.EXIT      # padding launches trap to EXIT
+    orig_lens, gmem_parts = [], []
+    pos_launch_l, pos_bxy_l = [], []
+    offsets, nblocks = [], []
+    for i, (launch, mod) in enumerate(zip(launches, mods)):
+        bdx, bdy = _norm_block_dim(launch.block_dim)
+        bdims[i] = bdx * bdy
+        bd_xys[i] = (bdx, bdy)
+        grid_xys[i] = launch.grid
+        codes[i] = reg.pad_code(mod.code, code_len)
+        g = launch.gmem
+        orig_lens.append(int(g.shape[0]))
+        gmem_parts.append(g)
+        bxys = _block_positions(launch.grid)
+        if len(bxys) == 0:
+            raise ValueError(
+                f"launch {i} ({mod.name}) has an empty grid "
+                f"{launch.grid} (0 blocks)")
+        offsets.append(sum(nblocks))
+        nblocks.append(len(bxys))
+        pos_launch_l.append(np.full(len(bxys), i, np.int32))
+        pos_bxy_l.append(bxys)
+
+    g_width = reg.bucket_gmem_len(max(orig_lens))
+    gmems = jnp.stack(
+        [_pad_gmem_device(g, g_width) for g in gmem_parts]
+        + [jnp.zeros((g_width,), jnp.int32)] * (l_bucket - n_l))
+
+    warps_needed = max(warps_for(int(b)) for b in bdims[:n_l])
+    n_warps = pad_warps or warps_needed
+    if n_warps < warps_needed:
+        raise ValueError(
+            f"pad_warps={pad_warps} < {warps_needed} warps required by "
+            f"the widest launch ({int(bdims[:n_l].max())} threads) — "
+            "threads beyond the padding would silently never run")
+    pos_launch = np.concatenate(pos_launch_l)
+    pos_bxy = np.concatenate(pos_bxy_l)
+    n_blocks = len(pos_launch)
+    if -(-n_blocks // n_sm) > 1 << 15:
+        # the split hi/lo per-SM accumulator in _run_positions is exact
+        # to 2**15 blocks per SM; beyond that the lo lane could wrap
+        raise ValueError(
+            f"{n_blocks} blocks on {n_sm} SMs exceeds the per-SM cycle "
+            f"accumulator bound of {1 << 15} blocks/SM per execute() — "
+            "split the grid across multiple execute() calls")
+
+    # schedule: position p -> SM p % n_sm, super-step p // n_sm.  Each
+    # dispatch group pads to a pow2-bucketed width with masked duplicate
+    # blocks, so ragged tails and small grids together cost at most
+    # log2(chunk)+1 cached traces — instead of either retracing per
+    # ragged size (the seed behaviour) or simulating up to width-1
+    # discarded blocks (full-width padding); waste is bounded below the
+    # group's real block count.
+    sm_ids_all = (np.arange(n_blocks) % n_sm).astype(np.int32)
+    spd_max = max(1, chunk // n_sm)          # super-steps per dispatch
+
+    codes_d = jnp.asarray(codes)
+    bdims_d = jnp.asarray(bdims)
+    bd_xys_d = jnp.asarray(bd_xys)
+    grid_xys_d = jnp.asarray(grid_xys)
+    sm_cyc = jnp.zeros((2, n_sm), jnp.int32)    # (hi, lo) split lanes
+    ctr_groups = []
+    lo = 0
+    while lo < n_blocks:
+        spd = spd_max
+        while spd // 2 >= -(-(n_blocks - lo) // n_sm):
+            spd //= 2
+        width = spd * n_sm
+        take = min(width, n_blocks - lo)
+        pl = pos_launch[lo:lo + take]
+        pb = pos_bxy[lo:lo + take]
+        sm = sm_ids_all[lo:lo + take]
+        if take < width:
+            pad = width - take
+            pl = np.concatenate([pl, np.zeros(pad, np.int32)])
+            pb = np.concatenate([pb, np.zeros((pad, 2), np.int32)])
+            sm = np.concatenate([sm, np.zeros(pad, np.int32)])
+        group = (jnp.asarray(pl), jnp.asarray(pb),
+                 jnp.asarray(np.arange(width) < take), jnp.asarray(sm))
+        shardings = _sm_shardings(n_sm, width) if shard_sm else None
+        if shardings is not None:
+            group = tuple(jax.device_put(a, s)
+                          for a, s in zip(group, shardings))
+        gmems, sm_cyc, ctr = _run_positions(
+            cfg, n_warps, codes_d, bdims_d, bd_xys_d, grid_xys_d,
+            *group, gmems, sm_cyc)
+        # strip this group's padding so stacked counter index == global
+        # block position
+        ctr_groups.append(jax.tree.map(lambda x: x[:take], ctr))
+        lo += take
+
+    ctrs = jax.tree.map(lambda *xs: jnp.concatenate(xs), *ctr_groups) \
+        if len(ctr_groups) > 1 else ctr_groups[0]
+    return DeviceGrid(gmems=gmems, ctrs=ctrs, sm_cyc=sm_cyc, n_sm=n_sm,
+                      n_steps=-(-n_blocks // n_sm), launch_offsets=offsets,
+                      launch_blocks=nblocks, orig_lens=orig_lens)
+
+
+def _sm_shardings(n_sm: int, width: int):
+    """NamedShardings placing the schedule's block-batch axis on local
+    devices — device-parallel block execution via the mesh of
+    :mod:`repro.launch.mesh`.
+
+    The placement is contiguous along the position axis while SM
+    *attribution* is strided (``p % n_sm``), so per-SM counter affinity
+    is layout-agnostic: results and executed counters are identical
+    either way, only block compute is spread across devices.  Returns
+    None (sharding skipped) when the dispatch width does not divide over
+    the devices; a single-device host degenerates to a no-op placement.
+    """
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from ..launch.mesh import make_sm_mesh
+    mesh = make_sm_mesh(n_sm)
+    if width % mesh.devices.size != 0:
+        return None
+    return (NamedSharding(mesh, P("sm")),
+            NamedSharding(mesh, P("sm", None)),
+            NamedSharding(mesh, P("sm")),
+            NamedSharding(mesh, P("sm")))
+
+
+#: Registry behind bare execute()/run_grid() calls.  Bounded so a
+#: long-lived process streaming fresh binaries through the
+#: compatibility path (e.g. generated test programs) cannot grow it
+#: monotonically; serving layers hold their own registries.
+_default_registry = ModuleRegistry(max_modules=1024)
+
+
+def run_grid(code, grid: Tuple[int, int], block_dim, gmem,
+             cfg: MachineConfig = MachineConfig(), chunk: int = 8,
+             n_sm: int = 1) -> GridResult:
+    """Single-launch compatibility entry: execute and materialize."""
+    dg = execute([LaunchSpec(code, grid, block_dim, gmem)],
+                 n_sm=n_sm, cfg=cfg, chunk=chunk)
+    return dg.to_results()[0]

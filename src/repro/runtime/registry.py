@@ -1,0 +1,136 @@
+"""Binary cache / module registry — the overlay property at serving scale.
+
+The paper's selling point is that a CUDA binary is *data*: the FPGA is
+configured once and any kernel then loads in seconds.  Our analogue is
+the jit cache — one trace of the interpreter executes any program of the
+same padded length.  At serving scale that only holds if tenant binaries
+of *different* lengths land on a *small, fixed* set of padded shapes, so
+this module buckets program lengths (and global-memory sizes) and
+memoizes loaded binaries by content, guaranteeing that a new tenant
+binary never retraces the machine:
+
+* :func:`bucket_code_len` / :func:`pad_code` — pad a program to the next
+  length bucket with EXIT rows (same trap padding as ``asm.finish``);
+* :func:`bucket_gmem_len` — round a launch's global memory up to the
+  next power of two, so launches of nearby sizes share one trace;
+* :class:`ModuleRegistry` — content-addressed cache of loaded binaries:
+  ``load`` returns the *same* :class:`Module` for the same bytes, and
+  the hit/miss counters make cache behaviour testable.
+
+The jitted machine itself is memoized by ``jax.jit`` keyed on
+``(MachineConfig, n_warps)`` plus the *bucketed* array shapes — see
+:mod:`repro.runtime.executor`.
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Dict, NamedTuple, Optional
+
+import numpy as np
+
+from ..core import isa
+
+#: Padded-program-length buckets.  All five paper kernels build at
+#: PROGRAM_PAD = 96; foreign binaries round up to the nearest bucket
+#: (then to a multiple of 64 beyond the table).
+CODE_BUCKETS = (64, 96, 128, 192, 256)
+
+#: Smallest global-memory allocation; sizes round up to powers of two.
+GMEM_MIN_WORDS = 64
+
+
+def bucket(n: int, table, step: int) -> int:
+    """Smallest table bucket holding ``n``; beyond the table, the next
+    multiple of ``step``.  One bucketing rule for code lengths, launch
+    widths and any future padded axis."""
+    for b in table:
+        if n <= b:
+            return b
+    return -(-n // step) * step
+
+
+def bucket_code_len(n_instr: int) -> int:
+    """Smallest code-length bucket that holds ``n_instr`` instructions."""
+    return bucket(n_instr, CODE_BUCKETS, 64)
+
+
+def bucket_gmem_len(n_words: int) -> int:
+    """Global-memory bucket: next power of two, at least GMEM_MIN_WORDS."""
+    b = GMEM_MIN_WORDS
+    while b < n_words:
+        b *= 2
+    return b
+
+
+def pad_code(code: np.ndarray, pad_to: Optional[int] = None) -> np.ndarray:
+    """Pad a program to ``pad_to`` (default: its bucket) with EXIT rows.
+
+    EXIT padding traps runaway control flow exactly like
+    ``asm.Program.finish`` — a PC that falls off the real program
+    retires the warp instead of executing garbage.
+    """
+    code = np.asarray(code, np.int32)
+    if code.ndim != 2 or code.shape[1] != isa.NUM_FIELDS:
+        raise ValueError(f"program must be (n, {isa.NUM_FIELDS}) int32, "
+                         f"got {code.shape}")
+    target = bucket_code_len(len(code)) if pad_to is None else pad_to
+    if len(code) > target:
+        raise ValueError(f"program of {len(code)} instrs > bucket {target}")
+    pad = np.zeros((target - len(code), isa.NUM_FIELDS), np.int32)
+    pad[:, isa.F_OP] = isa.EXIT
+    return np.concatenate([code, pad])
+
+
+class Module(NamedTuple):
+    """A loaded kernel binary: bucket-padded, content-addressed."""
+    name: str
+    code: np.ndarray     # (bucket_len, NUM_FIELDS) int32, EXIT-padded
+    n_instr: int         # original (pre-padding) instruction count
+    key: str             # content hash of the original binary
+
+    @property
+    def padded_len(self) -> int:
+        return self.code.shape[0]
+
+
+class ModuleRegistry:
+    """Content-addressed cache of loaded kernel binaries.
+
+    ``load`` is idempotent: the same binary (bit-for-bit) returns the
+    same :class:`Module` object, so downstream jit caches see one
+    canonical padded array per distinct program.  ``hits``/``misses``
+    expose cache behaviour for tests and serving metrics.
+    """
+
+    def __init__(self, max_modules: Optional[int] = None) -> None:
+        self._modules: Dict[str, Module] = {}
+        self.max_modules = max_modules
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._modules)
+
+    def load(self, code: np.ndarray, name: Optional[str] = None) -> Module:
+        code = np.asarray(code, np.int32)
+        key = hashlib.sha1(code.tobytes()).hexdigest()
+        mod = self._modules.get(key)
+        if mod is not None:
+            self.hits += 1
+            # LRU refresh: re-insert at the back of the dict order
+            self._modules.pop(key)
+            self._modules[key] = mod
+            return mod
+        self.misses += 1
+        if self.max_modules and len(self._modules) >= self.max_modules:
+            self._modules.pop(next(iter(self._modules)))  # evict LRU
+        mod = Module(name=name or f"module_{key[:8]}", code=pad_code(code),
+                     n_instr=len(code), key=key)
+        self._modules[key] = mod
+        return mod
+
+    def as_module(self, code_or_module, name: Optional[str] = None) -> Module:
+        """Coerce a raw binary (or pass through a Module) via the cache."""
+        if isinstance(code_or_module, Module):
+            return code_or_module
+        return self.load(code_or_module, name)

@@ -1,0 +1,186 @@
+"""Multi-tenant launch queue: batch concurrent launches into SM packs.
+
+The overlay property makes a soft GPGPU *servable*: kernels are data, so
+one resident machine can run many tenants' binaries back-to-back with no
+reconfiguration.  :class:`RuntimeServer` is that serving layer:
+
+* clients ``submit`` launches (any mix of binaries, geometries and
+  memories) and get a ticket back immediately;
+* ``drain`` packs every pending launch's blocks into one round-robin
+  schedule across ``n_sm`` SMs and executes it in a single pass through
+  :func:`repro.runtime.executor.execute` — all tenants padded to one
+  bucketed shape, so the whole mixed batch reuses **one** compiled
+  machine (a sequential ``run_grid`` loop pays one trace per distinct
+  kernel shape instead);
+* results come back per ticket, with a :class:`DrainStats` reporting
+  launches/sec and the executed per-SM cycle counters.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, NamedTuple, Optional, Tuple
+
+import numpy as np
+
+from ..core.pipeline import MachineConfig
+from . import executor as ex
+from .registry import ModuleRegistry
+
+
+class LaunchRequest(NamedTuple):
+    ticket: int
+    client: str
+    spec: ex.LaunchSpec
+    attempts: int = 0     # failed drain attempts so far
+
+
+class DrainStats(NamedTuple):
+    n_launches: int
+    n_blocks: int
+    n_sm: int
+    wall_s: float
+    launches_per_s: float
+    per_sm_cycles: np.ndarray    # executed counters for the drained batch
+    n_steps: int
+
+
+class RuntimeServer:
+    """Batches pending launches from concurrent clients into super-steps."""
+
+    #: a batch is dropped (tickets unredeemable, exception always
+    #: propagated) after this many failed drain attempts
+    MAX_ATTEMPTS = 3
+
+    def __init__(self, n_sm: int = 2, cfg: MachineConfig = MachineConfig(),
+                 chunk: Optional[int] = None, max_batch: int = 32,
+                 registry: Optional[ModuleRegistry] = None):
+        self.n_sm = n_sm
+        self.cfg = cfg
+        # default: one SM-wide super-step per dispatch — small groups
+        # keep lockstep dispatches homogeneous (a group runs as long as
+        # its longest block), measurably better than wide groups for
+        # mixed-tenant batches
+        self.chunk = max(2, n_sm) if chunk is None else chunk
+        self.max_batch = max_batch
+        self.registry = registry or ModuleRegistry(max_modules=1024)
+        self._pending: List[LaunchRequest] = []
+        # results of passes completed inside a drain() that later raised
+        # survive here until the next successful drain redeems them
+        self._completed: Dict[int, ex.GridResult] = {}
+        self._next_ticket = 0
+        self.drains = 0
+        self.launches_served = 0
+
+    def submit(self, code, grid, block_dim, gmem,
+               client: str = "anon") -> int:
+        """Enqueue one launch; returns a ticket redeemable at ``drain``.
+
+        Host arrays are snapshotted — a tenant may reuse its buffer
+        immediately after submitting (device arrays are immutable and
+        pass through as-is).  Geometry is validated here so a malformed
+        request is rejected at the door instead of poisoning a later
+        ``drain`` window shared with other tenants.
+        """
+        gx, gy = grid
+        if gx < 1 or gy < 1:
+            raise ValueError(f"empty grid {grid}")
+        if ex.warps_for(block_dim) < 1:
+            raise ValueError(f"empty block_dim {block_dim}")
+        if gx * gy > self.block_budget():
+            raise ValueError(
+                f"grid {grid} ({gx * gy} blocks) exceeds this server's "
+                f"per-drain block budget of {self.block_budget()} "
+                f"({self.n_sm} SMs x the executor's 2**15 blocks/SM "
+                "cycle-accumulator bound)")
+        if isinstance(gmem, np.ndarray) or not hasattr(gmem, "ndim"):
+            gmem = np.array(gmem, np.int32)   # snapshot (lists included)
+        if gmem.ndim != 1:
+            raise ValueError(f"gmem must be 1-D, got shape {gmem.shape}")
+        mod = self.registry.as_module(code)
+        ticket = self._next_ticket
+        self._next_ticket += 1
+        self._pending.append(LaunchRequest(
+            ticket, client, ex.LaunchSpec(mod, grid, block_dim, gmem)))
+        return ticket
+
+    def pending(self) -> int:
+        return len(self._pending)
+
+    def block_budget(self) -> int:
+        """Most blocks one executor pass can attribute exactly."""
+        return (1 << 15) * self.n_sm
+
+    def drain(self) -> Tuple[Dict[int, ex.GridResult], DrainStats]:
+        """Execute every pending launch in SM-packed batches.
+
+        Pops up to ``max_batch`` launches per executor pass (the launch
+        bucket bound) and repeats until the queue is empty.  Returns
+        ``{ticket: GridResult}`` plus batch statistics; per-SM counters
+        are summed over passes (the SMs run the passes back-to-back).
+        Tickets redeemed from a previously-failed drain appear in the
+        results but not in this drain's execution statistics.
+        """
+        if not self._pending and not self._completed:
+            return {}, DrainStats(0, 0, self.n_sm, 0.0, 0.0,
+                                  np.zeros(self.n_sm, np.int64), 0)
+        t0 = time.perf_counter()
+        # redeem passes completed before a previous drain() raised
+        results, self._completed = self._completed, {}
+        per_sm = np.zeros(self.n_sm, np.int64)
+        n_blocks = n_steps = n_launches = 0
+        while self._pending:
+            # pack the window within BOTH the launch bucket (max_batch)
+            # and the executor's exact-cycle block budget, so a full
+            # window of individually-valid launches can never trip the
+            # accumulator bound mid-drain (submit() already rejects any
+            # single launch that could not fit alone)
+            batch, blocks_packed = [], 0
+            while self._pending and len(batch) < self.max_batch:
+                nxt = self._pending[0]
+                nb = nxt.spec.grid[0] * nxt.spec.grid[1]
+                if batch and blocks_packed + nb > self.block_budget():
+                    break
+                batch.append(self._pending.pop(0))
+                blocks_packed += nb
+            # SM-packing policy: schedule same-binary launches adjacently
+            # so lockstep dispatch groups stay homogeneous — a group runs
+            # as long as its longest block, and mixing a 44k-cycle matmul
+            # block with a 400-cycle reduction block would stall the
+            # short one's lanes for the difference.  Stable sort keeps
+            # each launch's blocks in order; cross-launch merge order is
+            # unobservable (disjoint per-launch memories).
+            batch.sort(key=lambda r: self.registry.as_module(
+                r.spec.code).key)
+            # one padded width for the whole batch: every tenant's blocks
+            # run through the same compiled machine
+            pad_warps = max(ex.warps_for(r.spec.block_dim) for r in batch)
+            try:
+                dg = ex.execute([r.spec for r in batch], n_sm=self.n_sm,
+                                cfg=self.cfg, chunk=self.chunk,
+                                pad_warps=pad_warps,
+                                registry=self.registry)
+            except Exception:
+                # keep this drain's completed passes redeemable by the
+                # next drain(), and requeue the failing batch at the
+                # TAIL with a bumped retry count — later submissions
+                # are not starved behind a poisoned window, and a batch
+                # that keeps failing is dropped after MAX_ATTEMPTS
+                # (its tickets die with the raised exception)
+                self._completed.update(results)
+                self._pending.extend(
+                    r._replace(attempts=r.attempts + 1) for r in batch
+                    if r.attempts + 1 < self.MAX_ATTEMPTS)
+                raise
+            for req, res in zip(batch, dg.to_results()):
+                results[req.ticket] = res
+            rep = dg.report()
+            per_sm += rep.per_sm_cycles
+            n_blocks += rep.n_blocks
+            n_steps += rep.n_steps
+            n_launches += len(batch)
+        wall = time.perf_counter() - t0
+        self.drains += 1
+        self.launches_served += n_launches
+        stats = DrainStats(n_launches, n_blocks, self.n_sm, wall,
+                           n_launches / max(wall, 1e-9), per_sm, n_steps)
+        return results, stats

@@ -1,0 +1,203 @@
+"""Streams and events — CUDA-style async launch ordering on JAX.
+
+A :class:`Stream` owns a device-resident global memory and a FIFO of
+launches against it, exactly like a CUDA stream ordering kernels that
+mutate device memory.  ``Stream.launch`` dispatches **eagerly** through
+the multi-SM executor and returns a :class:`Launch` future immediately:
+JAX's async dispatch keeps the host free, in-stream ordering is real
+dataflow (each launch consumes the memory produced by its predecessor),
+and nothing touches the host until ``Launch.result`` or an explicit
+synchronize.
+
+Cross-stream dependencies use :class:`Event`: ``record_event`` snapshots
+the recording stream's tail, ``wait_event`` orders subsequent launches
+of the waiting stream after it, and ``Event.gmem()`` exposes the
+recorded memory so a consumer stream can *read* the producer's output —
+which is the only cross-stream edge that is observable here, since each
+stream owns its memory and launches are pure gmem→gmem functions.  The
+ordering token threaded by ``wait_event`` is a best-effort device-side
+data edge on top of the host's submission order.
+"""
+from __future__ import annotations
+
+import weakref
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.pipeline import MachineConfig
+from . import executor as ex
+from .registry import Module, ModuleRegistry
+
+
+def _order_token(arr) -> jnp.ndarray:
+    """A zero scalar data-dependent on ``arr`` (device-side ordering edge)."""
+    return jnp.min(jnp.ravel(arr)[:1]) & jnp.int32(0)
+
+
+class Launch:
+    """Device-resident future for one kernel launch."""
+
+    def __init__(self, devgrid: ex.DeviceGrid, module: Module, grid,
+                 block_dim):
+        self._dg = devgrid
+        self.module = module
+        self.grid = grid
+        self.block_dim = block_dim
+        self._result: Optional[ex.GridResult] = None
+
+    def gmem(self) -> jnp.ndarray:
+        """Final global memory — device array, no host sync."""
+        return self._dg.launch_gmem(0)
+
+    def report(self) -> ex.MultiSMReport:
+        return self._dg.report()
+
+    def done(self) -> bool:
+        g = self.gmem()
+        if hasattr(g, "is_ready"):
+            return bool(g.is_ready())
+        # no readiness probe on this array type: only claim done after
+        # actually being done (conservative, never early)
+        jax.block_until_ready(g)
+        return True
+
+    def wait(self) -> "Launch":
+        jax.block_until_ready(self.gmem())
+        return self
+
+    def result(self) -> ex.GridResult:
+        """Materialize the launch's :class:`GridResult` (host sync)."""
+        if self._result is None:
+            self._result = self._dg.to_results()[0]
+        return self._result
+
+
+class Event:
+    """Snapshot of a stream's tail, for cross-stream ordering and sync."""
+
+    def __init__(self, gmem: jnp.ndarray, launches: List[Launch]):
+        self._gmem = gmem
+        self._launches = list(launches)
+
+    def gmem(self) -> jnp.ndarray:
+        """The recorded stream memory (device array, no sync)."""
+        return self._gmem
+
+    def token(self) -> jnp.ndarray:
+        return _order_token(self._gmem)
+
+    def query(self) -> bool:
+        """True when every recorded launch has completed (non-blocking)."""
+        return all(l.done() for l in self._launches)
+
+    def synchronize(self) -> "Event":
+        jax.block_until_ready(self._gmem)
+        return self
+
+
+class Stream:
+    """In-order launch queue over a stream-owned device global memory."""
+
+    def __init__(self, runtime: "Runtime", gmem=None):
+        self._rt = runtime
+        self._gmem = None if gmem is None else jnp.asarray(gmem, jnp.int32)
+        # only the tail launch is retained (chaining and record_event
+        # never look further back) so a long-lived stream does not
+        # accumulate one DeviceGrid per launch served
+        self._tail: Optional[Launch] = None
+        self._token: Optional[jnp.ndarray] = None
+
+    @property
+    def gmem(self) -> Optional[jnp.ndarray]:
+        """Current stream memory: the last launch's output (device)."""
+        return self._gmem
+
+    def set_gmem(self, gmem) -> "Stream":
+        self._gmem = jnp.asarray(gmem, jnp.int32)
+        return self
+
+    def launch(self, module, grid, block_dim, gmem=None) -> Launch:
+        """Enqueue one kernel.  ``gmem=None`` chains on the stream memory
+        (CUDA semantics: kernels in a stream see each other's writes);
+        an explicit array / :class:`Launch` / :class:`Event` reads that
+        memory instead.  Returns immediately with a device future.
+        """
+        mod = self._rt.registry.as_module(module)
+        if gmem is None:
+            if self._gmem is None:
+                raise ValueError("stream has no memory: pass gmem= or "
+                                 "set_gmem() first")
+            g = self._gmem
+        elif isinstance(gmem, Launch):
+            g = gmem.gmem()
+        elif isinstance(gmem, Event):
+            g = gmem.gmem()
+        else:
+            g = jnp.asarray(gmem, jnp.int32)
+        if self._token is not None:
+            g = g + self._token            # ordering edge from wait_event
+            self._token = None
+        dg = ex.execute([ex.LaunchSpec(mod, grid, block_dim, g)],
+                        n_sm=self._rt.n_sm, cfg=self._rt.cfg,
+                        chunk=self._rt.chunk, registry=self._rt.registry)
+        launch = Launch(dg, mod, grid, block_dim)
+        self._tail = launch
+        self._gmem = launch.gmem()
+        return launch
+
+    def record_event(self) -> Event:
+        if self._gmem is None:
+            raise ValueError("cannot record an event on an empty stream")
+        return Event(self._gmem,
+                     [self._tail] if self._tail is not None else [])
+
+    def wait_event(self, event: Event) -> "Stream":
+        """Order subsequent launches of this stream after ``event``."""
+        tok = event.token()
+        self._token = tok if self._token is None else self._token + tok
+        return self
+
+    def synchronize(self) -> "Stream":
+        if self._gmem is not None:
+            jax.block_until_ready(self._gmem)
+        return self
+
+
+class Runtime:
+    """The device runtime: one binary cache + config shared by streams.
+
+    >>> rt = Runtime(n_sm=2)
+    >>> mod = rt.load(code)
+    >>> s = rt.stream(gmem0)
+    >>> fut = s.launch(mod, (4, 1), (32, 1))
+    >>> out = fut.result().gmem
+    """
+
+    def __init__(self, cfg: MachineConfig = MachineConfig(),
+                 n_sm: int = 1, chunk: int = 8,
+                 registry: Optional[ModuleRegistry] = None):
+        self.cfg = cfg
+        self.n_sm = n_sm
+        self.chunk = chunk
+        self.registry = registry or ModuleRegistry(max_modules=1024)
+        # weak registry: a stream (and the device memory it pins) is
+        # freed as soon as its creator drops it, so a resident runtime
+        # serving one stream per request does not leak
+        self._streams: "weakref.WeakSet[Stream]" = weakref.WeakSet()
+
+    def load(self, code: np.ndarray, name: Optional[str] = None) -> Module:
+        """Load a kernel binary through the content-addressed cache."""
+        return self.registry.load(code, name)
+
+    def stream(self, gmem=None) -> Stream:
+        s = Stream(self, gmem)
+        self._streams.add(s)
+        return s
+
+    def synchronize(self) -> "Runtime":
+        for s in list(self._streams):
+            s.synchronize()
+        return self

@@ -1,0 +1,290 @@
+"""Device runtime: binary cache, streams/events, executed multi-SM timing.
+
+The acceptance property: per-SM cycle counters accumulated *on device*
+by the executed schedule match the analytical round-robin replay
+(``GridResult.per_sm_cycles``) bit-exactly for all five paper benchmarks
+at 1 and 2 SMs — the executor really runs the schedule the paper's block
+scheduler describes.
+"""
+import numpy as np
+import pytest
+
+from repro import runtime as rt
+from repro.core import asm, isa, scheduler
+from repro.core.machine import MachineConfig
+from repro.core.programs import ALL
+from repro.runtime.executor import _run_positions
+
+
+def _bench(name, n, rng):
+    mod = ALL[name]
+    code = mod.build(n)
+    grid, bd = mod.launch(n)
+    return code, grid, bd, mod.make_gmem(rng, n), mod
+
+
+# --------------------------------------------------------------- executor
+
+@pytest.mark.parametrize("name", sorted(ALL))
+def test_executed_cycles_match_analytical(name, rng):
+    """Executed per-SM counters == analytical round-robin, bit-exact."""
+    code, grid, bd, g0, mod = _bench(name, 32, rng)
+    res = scheduler.run_grid(code, grid, bd, g0.copy())
+    for n_sm in (1, 2):
+        dg = rt.execute([rt.LaunchSpec(code, grid, bd, g0.copy())],
+                        n_sm=n_sm)
+        rep = dg.report()
+        assert rep.n_sm == n_sm
+        np.testing.assert_array_equal(rep.per_sm_cycles,
+                                      res.per_sm_cycles(n_sm))
+        assert rep.kernel_cycles == res.sm_cycles(n_sm)
+        # functional results are n_sm-independent
+        np.testing.assert_array_equal(dg.to_results()[0].gmem, res.gmem)
+
+
+def test_multi_launch_batch_matches_individual(rng):
+    """A batched execute of several launches gives each launch the same
+    result (memory + counters) as running it alone."""
+    specs, singles = [], []
+    for i, name in enumerate(("matmul", "transpose", "bitonic")):
+        code, grid, bd, g0, mod = _bench(name, 32, rng)
+        specs.append(rt.LaunchSpec(code, grid, bd, g0.copy()))
+        singles.append(scheduler.run_grid(code, grid, bd, g0.copy()))
+    dg = rt.execute(specs, n_sm=2, pad_warps=8)
+    for got, want in zip(dg.to_results(), singles):
+        np.testing.assert_array_equal(got.gmem, want.gmem)
+        np.testing.assert_array_equal(got.cycles_per_block,
+                                      want.cycles_per_block)
+        np.testing.assert_array_equal(got.op_issues, want.op_issues)
+    # the batch's executed counters == analytical replay of the
+    # concatenated block list
+    cyc = np.concatenate([np.asarray(s.cycles_per_block, np.int64)
+                          for s in singles])
+    per_sm = np.bincount(np.arange(len(cyc)) % 2,
+                         weights=cyc + rt.BLOCK_SCHED_OVERHEAD,
+                         minlength=2).astype(np.int64)
+    np.testing.assert_array_equal(dg.report().per_sm_cycles, per_sm)
+
+
+def test_ragged_grid_bounded_traces(rng):
+    """Ragged grids dispatch through pow2-bucketed group widths: a
+    9-block grid at chunk=4 uses the {4, 1} width traces (the tail is
+    not retraced per ragged size, nor simulated at full width), and a
+    second ragged grid adds no new traces."""
+    if not hasattr(_run_positions, "_cache_size"):
+        pytest.skip("jit cache introspection unavailable")
+    code, grid, bd, g0, mod = _bench("transpose", 48, rng)
+    assert grid[0] * grid[1] == 9
+    _run_positions.clear_cache()
+    res = scheduler.run_grid(code, grid, bd, g0.copy(), chunk=4)
+    assert _run_positions._cache_size() == 2       # widths 4 and 1
+    np.testing.assert_array_equal(res.gmem[mod.out_slice(48)],
+                                  mod.oracle(g0, 48))
+    # a different grid in the same (warps, gmem) buckets — 16 blocks at
+    # n=64 shares the 8192-word bucket with n=48 — adds no new traces
+    code, grid, bd, g0, mod = _bench("transpose", 64, rng)
+    assert grid[0] * grid[1] == 16
+    res = scheduler.run_grid(code, grid, bd, g0.copy(), chunk=4)
+    assert _run_positions._cache_size() == 2
+    np.testing.assert_array_equal(res.gmem[mod.out_slice(64)],
+                                  mod.oracle(g0, 64))
+
+
+def test_run_grid_n_sm_functional_invariance(rng):
+    """n_sm changes timing attribution only, never the memory result."""
+    code, grid, bd, g0, mod = _bench("matmul", 32, rng)
+    r1 = scheduler.run_grid(code, grid, bd, g0.copy(), n_sm=1)
+    r2 = scheduler.run_grid(code, grid, bd, g0.copy(), n_sm=2)
+    np.testing.assert_array_equal(r1.gmem, r2.gmem)
+    np.testing.assert_array_equal(r1.cycles_per_block, r2.cycles_per_block)
+
+
+def test_sm_mesh_sharding_smoke(rng):
+    """shard_sm places the schedule axis on local devices (no-op on 1)."""
+    code, grid, bd, g0, mod = _bench("transpose", 32, rng)
+    dg = rt.execute([rt.LaunchSpec(code, grid, bd, g0.copy())],
+                    n_sm=2, shard_sm=True)
+    np.testing.assert_array_equal(
+        dg.to_results()[0].gmem[mod.out_slice(32)], mod.oracle(g0, 32))
+
+
+def test_execute_rejects_bad_launches(rng):
+    """Degenerate inputs fail loudly: an empty grid errors (the seed
+    scheduler also raised) and an undersized pad_warps would silently
+    skip threads, so it must raise instead."""
+    code, grid, bd, g0, mod = _bench("transpose", 32, rng)
+    with pytest.raises(ValueError, match="empty grid"):
+        rt.execute([rt.LaunchSpec(code, (0, 1), bd, g0)])
+    with pytest.raises(ValueError, match="empty grid"):
+        # also inside a mixed batch: no silent unexecuted "success"
+        rt.execute([rt.LaunchSpec(code, grid, bd, g0),
+                    rt.LaunchSpec(code, (0, 1), bd, g0)])
+    with pytest.raises(ValueError, match="pad_warps"):
+        rt.execute([rt.LaunchSpec(code, grid, bd, g0)], pad_warps=1)
+
+
+# ---------------------------------------------------------- binary cache
+
+def test_registry_buckets_and_padding():
+    assert rt.bucket_code_len(50) == 64
+    assert rt.bucket_code_len(96) == 96
+    assert rt.bucket_code_len(97) == 128
+    assert rt.bucket_code_len(300) == 320
+    assert rt.bucket_gmem_len(1) == rt.GMEM_MIN_WORDS
+    assert rt.bucket_gmem_len(65) == 128
+    assert rt.bucket_gmem_len(4096) == 4096
+    code = ALL["transpose"].build(32)[:20]
+    padded = rt.pad_code(code, 64)
+    assert padded.shape == (64, isa.NUM_FIELDS)
+    assert (padded[20:, isa.F_OP] == isa.EXIT).all()  # traps, not garbage
+
+
+def test_registry_content_addressed():
+    regy = rt.ModuleRegistry()
+    a = regy.load(ALL["bitonic"].build(32), "bitonic")
+    b = regy.load(ALL["bitonic"].build(32))
+    c = regy.load(ALL["autocorr"].build(32), "autocorr")
+    assert a is b and a is not c
+    assert (regy.hits, regy.misses, len(regy)) == (1, 2, 2)
+
+
+def test_new_binary_never_retraces(rng):
+    """The overlay property at serving scale: a binary the machine has
+    never seen executes through the existing jit cache entry."""
+    if not hasattr(_run_positions, "_cache_size"):
+        pytest.skip("jit cache introspection unavailable")
+    # bitonic and autocorr at n=32 share (n_warps=1, gmem bucket 64)
+    c1, g1, b1, m1, _ = _bench("bitonic", 32, rng)
+    c2, g2, b2, m2, _ = _bench("autocorr", 32, rng)
+    _run_positions.clear_cache()
+    scheduler.run_grid(c1, g1, b1, m1)
+    assert _run_positions._cache_size() == 1
+    scheduler.run_grid(c2, g2, b2, m2)       # different binary, same trace
+    assert _run_positions._cache_size() == 1
+
+
+# -------------------------------------------------------- streams/events
+
+def _kern(region_in, region_out, op):
+    p = asm.Program(op)
+    p.s2r("r0", isa.SR_TID)
+    p.ldg("r1", "r0", region_in)
+    if op == "add1":
+        p.iadd("r1", "r1", 1)
+    else:
+        p.iadd("r1", "r1", "r1")
+    p.stg("r0", "r1", region_out)
+    p.exit()
+    return p.finish(pad_to=96)
+
+
+def test_stream_in_order_chaining():
+    """Launches in one stream see their predecessors' writes (real
+    dataflow, not host sync): (x+1)*2 lands in the third region."""
+    runtime = rt.Runtime()
+    m1 = runtime.load(_kern(0, 64, "add1"), "add1")
+    m2 = runtime.load(_kern(64, 128, "double"), "double")
+    g0 = np.zeros(192, np.int32)
+    g0[:32] = np.arange(32)
+    s = runtime.stream(g0)
+    a = s.launch(m1, (1, 1), (32, 1))
+    b = s.launch(m2, (1, 1), (32, 1))       # returns before completion
+    np.testing.assert_array_equal(np.asarray(b.gmem())[128:160],
+                                  (np.arange(32) + 1) * 2)
+    res = a.result()
+    assert res.cycles_per_block.shape == (1,)
+    assert int(res.op_issues[isa.STG]) == 1
+    s.synchronize()
+    assert a.done() and b.done()
+
+
+def test_event_orders_cross_stream():
+    runtime = rt.Runtime()
+    m1 = runtime.load(_kern(0, 64, "add1"))
+    m2 = runtime.load(_kern(64, 128, "double"))
+    g0 = np.zeros(192, np.int32)
+    g0[:32] = np.arange(32)
+    s1 = runtime.stream(g0)
+    s1.launch(m1, (1, 1), (32, 1))
+    ev = s1.record_event()
+    s2 = runtime.stream()
+    s2.wait_event(ev)
+    c = s2.launch(m2, (1, 1), (32, 1), gmem=ev)
+    ev.synchronize()
+    assert ev.query()
+    np.testing.assert_array_equal(np.asarray(c.gmem())[128:160],
+                                  (np.arange(32) + 1) * 2)
+    runtime.synchronize()
+
+
+def test_stream_requires_memory():
+    runtime = rt.Runtime()
+    s = runtime.stream()
+    with pytest.raises(ValueError):
+        s.launch(_kern(0, 64, "add1"), (1, 1), (32, 1))
+    with pytest.raises(ValueError):
+        s.record_event()
+
+
+# --------------------------------------------------------------- server
+
+def test_server_concurrent_tenants_smoke(rng):
+    """Interleaved launches from all five paper kernels, three tenants,
+    drained in one SM-packed batch: every ticket's result matches its
+    oracle and the drain reports executed per-SM counters."""
+    srv = rt.RuntimeServer(n_sm=2)
+    want = {}
+    for i in range(10):
+        name = sorted(ALL)[i % 5]
+        mod = ALL[name]
+        code = mod.build(32)
+        g0 = mod.make_gmem(np.random.default_rng(i), 32)
+        t = srv.submit(code, *mod.launch(32), g0.copy(),
+                       client=f"tenant{i % 3}")
+        want[t] = (mod, g0)
+    assert srv.pending() == 10
+    results, stats = srv.drain()
+    assert srv.pending() == 0
+    for t, (mod, g0) in want.items():
+        np.testing.assert_array_equal(results[t].gmem[mod.out_slice(32)],
+                                      mod.oracle(g0, 32))
+    assert stats.n_launches == 10
+    assert stats.launches_per_s > 0
+    assert stats.per_sm_cycles.shape == (2,)
+    assert stats.per_sm_cycles.min() > 0
+    # same five binaries resubmitted: pure cache hits, and an empty
+    # drain is a cheap no-op
+    assert srv.registry.hits == 5
+    assert srv.drain()[1].n_launches == 0
+
+
+def test_server_rejects_and_recovers(rng):
+    """Malformed submissions bounce at the door; a drain that fails
+    mid-way strands no ticket — completed passes are redeemed by the
+    next drain and the failing batch stays queued."""
+    mod = ALL["transpose"]
+    code = mod.build(32)
+    g0 = mod.make_gmem(np.random.default_rng(0), 32)
+    srv = rt.RuntimeServer(n_sm=1, max_batch=1)
+    with pytest.raises(ValueError, match="empty grid"):
+        srv.submit(code, (0, 1), (16, 16), g0)
+    with pytest.raises(ValueError, match="block budget"):
+        srv.submit(code, (40000, 1), (16, 16), g0)
+    with pytest.raises(ValueError, match="1-D"):
+        srv.submit(code, (2, 2), (16, 16), g0.reshape(2, -1))
+    # force a mid-drain failure after one completed pass: corrupt the
+    # second request's spec behind the validator's back
+    t_good = srv.submit(code, *mod.launch(32), g0.copy())
+    t_bad = srv.submit(code, *mod.launch(32), g0.copy())
+    srv._pending[-1] = srv._pending[-1]._replace(
+        spec=srv._pending[-1].spec._replace(gmem=g0.reshape(2, -1)))
+    with pytest.raises(Exception):
+        srv.drain()
+    assert srv.pending() == 1            # failing batch restored
+    # un-corrupt and redeem: the completed good ticket comes back
+    srv._pending[0] = srv._pending[0]._replace(
+        spec=srv._pending[0].spec._replace(gmem=g0.copy()))
+    results, stats = srv.drain()
+    assert t_good in results and t_bad in results
+    np.testing.assert_array_equal(results[t_good].gmem[mod.out_slice(32)],
+                                  mod.oracle(g0, 32))
