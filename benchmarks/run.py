@@ -12,6 +12,8 @@ results are machine-readable.
   sched_wallclock    — run_grid wall-clock, 16x16-grid matmul [ours]
   bench_runtime_throughput — multi-tenant launch queue vs
                        sequential run_grid, 1/2/4 SMs          [ours]
+  bench_runtime_skewed — monolithic vs bucket-sub-batched drain
+                       padded gmem words, skewed workload      [ours]
   kernel_micro       — Pallas kernel wall-times (interpret)   [ours]
   roofline_summary   — dry-run roofline terms per cell        [ours]
 
@@ -269,6 +271,36 @@ def bench_runtime_throughput(n_launches=16, sms=(1, 2, 4)):
              f"batch_kernel_cycles={int(stats.per_sm_cycles.max())}")
 
 
+def bench_runtime_skewed(n_small=7, n_sm=2):
+    """Memory-aware drain scheduling on a footprint-skewed workload.
+
+    One 8192-word-bucket tenant (transpose n=64) plus ``n_small``
+    64-word-bucket tenants: the monolithic drain pads every small
+    tenant's allocation to the large bucket, the (gmem bucket, binary)
+    sub-batched drain keeps each tenant in its own bucket.  Emits the
+    padded-vs-useful gmem words per policy and the reduction ratio
+    (acceptance: >= 4x); results are oracle-checked inside
+    ``drain_workload`` and bit-exactness across policies is enforced by
+    tests/test_server_policies.py.
+    """
+    from repro.launch.gpgpu_serve import build_skewed_workload, \
+        drain_workload
+    work = build_skewed_workload(n_small)
+    padded = {}
+    for polname in ("monolithic", "bucket"):
+        srv, stats, t_srv = drain_workload(work, n_sm, policy=polname)
+        padded[polname] = stats.padded_gmem_words
+        emit(f"runtime_skew_{polname}_{len(work)}x_{n_sm}sm",
+             t_srv * 1e6 / len(work),
+             f"padded_words={stats.padded_gmem_words};"
+             f"useful_words={stats.useful_gmem_words};"
+             f"sub_batches={stats.n_sub_batches};"
+             f"occupancy={stats.occupancy:.2f}")
+    emit(f"runtime_skew_reduction_{len(work)}x_{n_sm}sm", 0.0,
+         f"padded_words_reduction="
+         f"{padded['monolithic'] / max(padded['bucket'], 1):.1f}x")
+
+
 def kernel_micro():
     """Pallas kernel micro-benchmarks (interpret mode on CPU)."""
     import jax.numpy as jnp
@@ -320,6 +352,7 @@ def smoke() -> None:
              f"speedup={scal / simt:.2f}")
     sched_wallclock(n=64, repeats=1)
     bench_runtime_throughput(n_launches=16, sms=(2,))
+    bench_runtime_skewed()
 
 
 def _write_json() -> None:
@@ -352,6 +385,7 @@ def main() -> None:
     table6_customize()
     sched_wallclock()
     bench_runtime_throughput()
+    bench_runtime_skewed()
     kernel_micro()
     roofline_summary()
     if args.json:

@@ -1,16 +1,22 @@
 """Multi-tenant soft-GPGPU serving driver.
 
     PYTHONPATH=src python -m repro.launch.gpgpu_serve \
-        --launches 16 --n-sm 2 --tenants 4 [--baseline]
+        --launches 16 --n-sm 2 --tenants 4 \
+        [--policy bucket|fair|monolithic] [--skewed] [--baseline]
 
 Simulated tenants submit a mixed workload — all five paper kernels at
 several input sizes — to the device runtime's launch queue
-(:class:`repro.runtime.RuntimeServer`), which batches the pending
-launches into SM-packed super-steps on one compiled machine: the
-overlay property ("new CUDA binary, no FPGA recompilation") exercised
-as a serving layer.  Every result is oracle-checked.  ``--baseline``
-also times one sequential ``run_grid`` call per launch from cold jit
-caches and reports the throughput ratio.
+(:class:`repro.runtime.RuntimeServer`), whose drain policy cuts each
+window of pending launches into SM-packed dispatch groups on one
+compiled machine: the overlay property ("new CUDA binary, no FPGA
+recompilation") exercised as a serving layer.  The default ``bucket``
+policy sub-batches by (gmem bucket, binary) so a small tenant never
+pads to a large tenant's memory bucket; ``--skewed`` builds the
+worst-case workload for the monolithic drain (one large-bucket tenant
+plus several small ones) to show the padded-words gap.  Every result
+is oracle-checked.  ``--baseline`` also times one sequential
+``run_grid`` call per launch from cold jit caches and reports the
+throughput ratio.
 """
 from __future__ import annotations
 
@@ -43,6 +49,25 @@ def build_workload(n_launches: int, seed: int = 0):
     return work
 
 
+def build_skewed_workload(n_small: int = 7, seed: int = 0):
+    """One large-gmem-bucket tenant plus ``n_small`` small ones.
+
+    transpose n=64 lands in the 8192-word pow2 bucket; the small
+    tenants (bitonic/autocorr n=32) in the 64-word bucket — the
+    footprint skew where a monolithic drain pads every small tenant to
+    the large bucket and a bucketed drain pays almost nothing.
+    """
+    mod = ALL["transpose"]
+    work = [("transpose", mod, 64, mod.build(64), mod.launch(64),
+             mod.make_gmem(np.random.default_rng(seed), 64))]
+    for i in range(n_small):
+        name = ("bitonic", "autocorr")[i % 2]
+        mod = ALL[name]
+        work.append((name, mod, 32, mod.build(32), mod.launch(32),
+                     mod.make_gmem(np.random.default_rng(seed + 1 + i), 32)))
+    return work
+
+
 def run_sequential_baseline(work) -> float:
     """One cold-cache ``run_grid`` call per launch, oracle-checked.
 
@@ -63,14 +88,15 @@ def run_sequential_baseline(work) -> float:
     return wall
 
 
-def drain_workload(work, n_sm: int, tenants: int = 4):
+def drain_workload(work, n_sm: int, tenants: int = 4,
+                   policy: str = "bucket"):
     """Submit ``work`` to a fresh cold-cache server and drain it.
 
     Oracle-checks every ticket; returns ``(server, stats, wall_s)``.
     """
     import jax
     jax.clear_caches()
-    srv = rt.RuntimeServer(n_sm=n_sm)
+    srv = rt.RuntimeServer(n_sm=n_sm, policy=policy)
     tickets = {}
     t0 = time.perf_counter()
     for i, (name, mod, n, code, (grid, bd), g0) in enumerate(work):
@@ -85,31 +111,59 @@ def drain_workload(work, n_sm: int, tenants: int = 4):
     return srv, stats, wall
 
 
+def print_stats(srv, stats, wall: float, n_sm: int, tenants: int) -> None:
+    per_sm = ",".join(str(int(c)) for c in stats.per_sm_cycles)
+    print(f"[serve] {stats.n_launches} launches / {stats.n_blocks} blocks "
+          f"from {tenants} tenants on {n_sm} SMs: {wall:.2f}s "
+          f"({stats.launches_per_s:.2f} launches/s), "
+          f"binary cache {len(srv.registry)} modules "
+          f"({srv.registry.hits} hits), per-SM cycles [{per_sm}]")
+    print(f"[serve] policy={srv.policy.name}: {stats.n_windows} windows / "
+          f"{stats.n_sub_batches} sub-batches, gmem words "
+          f"useful={stats.useful_gmem_words} "
+          f"padded={stats.padded_gmem_words}, "
+          f"SM-step occupancy {stats.occupancy:.2f}")
+    for client in sorted(stats.by_tenant):
+        ts = stats.by_tenant[client]
+        print(f"[serve]   tenant {client}: {ts.launches} launches / "
+              f"{ts.blocks} blocks, gmem useful={ts.useful_gmem_words} "
+              f"padded={ts.padded_gmem_words}")
+    for bucket in sorted(stats.by_bucket):
+        bs = stats.by_bucket[bucket]
+        print(f"[serve]   bucket {bucket}w: {bs.launches} launches / "
+              f"{bs.sub_batches} sub-batches, padded={bs.padded_gmem_words},"
+              f" occupancy {bs.occupancy:.2f}")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--launches", type=int, default=16)
     ap.add_argument("--n-sm", type=int, default=2)
     ap.add_argument("--tenants", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--policy", choices=sorted(rt.POLICIES),
+                    default="bucket", help="drain policy (default: bucket)")
+    ap.add_argument("--skewed", action="store_true",
+                    help="one large-bucket tenant + small ones (the "
+                         "workload bucketed drains exist for)")
     ap.add_argument("--baseline", action="store_true",
                     help="also time sequential run_grid calls (cold)")
     args = ap.parse_args(argv)
 
-    work = build_workload(args.launches, args.seed)
+    if args.skewed:
+        work = build_skewed_workload(max(1, args.launches - 1), args.seed)
+    else:
+        work = build_workload(args.launches, args.seed)
     t_seq = None
     if args.baseline:
         t_seq = run_sequential_baseline(work)
-        print(f"[serve] baseline: {args.launches} sequential run_grid "
+        print(f"[serve] baseline: {len(work)} sequential run_grid "
               f"calls in {t_seq:.2f}s "
-              f"({args.launches / t_seq:.2f} launches/s)")
+              f"({len(work) / t_seq:.2f} launches/s)")
 
-    srv, stats, wall = drain_workload(work, args.n_sm, args.tenants)
-    per_sm = ",".join(str(int(c)) for c in stats.per_sm_cycles)
-    print(f"[serve] {stats.n_launches} launches / {stats.n_blocks} blocks "
-          f"from {args.tenants} tenants on {args.n_sm} SMs: {wall:.2f}s "
-          f"({stats.launches_per_s:.2f} launches/s), "
-          f"binary cache {len(srv.registry)} modules "
-          f"({srv.registry.hits} hits), per-SM cycles [{per_sm}]")
+    srv, stats, wall = drain_workload(work, args.n_sm, args.tenants,
+                                      args.policy)
+    print_stats(srv, stats, wall, args.n_sm, args.tenants)
     if t_seq is not None:
         print(f"[serve] throughput vs sequential: {t_seq / wall:.2f}x")
     return stats

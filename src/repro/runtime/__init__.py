@@ -6,33 +6,48 @@ resident machine handles many tenants' binaries back-to-back:
 
 * :mod:`registry` — binary cache / module registry: bucketed program
   padding + content-addressed memoization, so a new tenant binary never
-  retraces the machine;
+  retraces the machine; launch footprints (code/gmem/warp buckets) are
+  the keys the drain policies schedule on;
 * :mod:`executor` — the multi-SM executor: blocks from one or more
   launches packed round-robin across ``n_sm`` SMs via a batched vmap
   axis, with per-SM cycle counters coming out of the executed schedule
   (the analytical replay is kept only as a cross-check);
 * :mod:`stream`  — streams and events: eager async dispatch, in-stream
-  ordering by real dataflow, cross-stream edges via events;
-* :mod:`server`  — the multi-tenant launch queue batching concurrent
-  launches into SM-packed super-steps.
+  ordering by real dataflow, cross-stream edges via events; plus the
+  server-routed :class:`QueuedStream`/:class:`QueuedLaunch` futures
+  that resolve exactly once when their drain sub-batch completes;
+* :mod:`policy`  — pluggable drain policies: monolithic super-steps,
+  ``(gmem bucket, binary)``-keyed sub-batching (no cross-tenant memory
+  padding), fair round-robin window composition, admission control and
+  per-tenant / per-bucket accounting;
+* :mod:`server`  — the multi-tenant launch queue draining policy-cut
+  windows into SM-packed dispatch groups.
 
 ``repro.core.scheduler.run_grid`` is a thin compatibility wrapper over
 :func:`executor.run_grid`, so every pre-runtime benchmark and test
 exercises this path.
 """
-from .registry import (CODE_BUCKETS, GMEM_MIN_WORDS, Module, ModuleRegistry,
-                       bucket_code_len, bucket_gmem_len, pad_code)
+from .registry import (CODE_BUCKETS, GMEM_MIN_WORDS, WARP_BUCKETS,
+                       Footprint, Module, ModuleRegistry, bucket_code_len,
+                       bucket_gmem_len, bucket_warps, footprint, pad_code)
 from .executor import (BLOCK_SCHED_OVERHEAD, LAUNCH_BUCKETS, DeviceGrid,
                        GridResult, LaunchSpec, MultiSMReport,
                        bucket_launches, execute, run_grid)
-from .stream import Event, Launch, Runtime, Stream
+from .stream import (Event, Launch, QueuedLaunch, QueuedStream, Runtime,
+                     Stream)
+from .policy import (POLICIES, AdmissionError, BucketDrain, BucketStats,
+                     DrainPolicy, FairBucketDrain, MonolithicDrain,
+                     TenantStats, make_policy)
 from .server import DrainStats, LaunchRequest, RuntimeServer
 
 __all__ = [
-    "BLOCK_SCHED_OVERHEAD", "CODE_BUCKETS", "DeviceGrid", "DrainStats",
-    "Event", "GMEM_MIN_WORDS", "GridResult", "Launch", "LaunchRequest",
-    "LaunchSpec", "LAUNCH_BUCKETS", "Module", "ModuleRegistry",
-    "MultiSMReport", "Runtime", "RuntimeServer", "Stream",
-    "bucket_code_len", "bucket_gmem_len", "bucket_launches", "execute",
-    "pad_code", "run_grid",
+    "AdmissionError", "BLOCK_SCHED_OVERHEAD", "BucketDrain", "BucketStats",
+    "CODE_BUCKETS", "DeviceGrid", "DrainPolicy", "DrainStats", "Event",
+    "FairBucketDrain", "Footprint", "GMEM_MIN_WORDS", "GridResult",
+    "Launch", "LaunchRequest", "LaunchSpec", "LAUNCH_BUCKETS",
+    "MonolithicDrain", "Module", "ModuleRegistry", "MultiSMReport",
+    "POLICIES", "QueuedLaunch", "QueuedStream", "Runtime", "RuntimeServer",
+    "Stream", "TenantStats", "WARP_BUCKETS", "bucket_code_len",
+    "bucket_gmem_len", "bucket_launches", "bucket_warps", "execute",
+    "footprint", "make_policy", "pad_code", "run_grid",
 ]

@@ -89,10 +89,28 @@ class MultiSMReport(NamedTuple):
     per_sm_cycles: np.ndarray   # (n_sm,) int64 — executed, not replayed
     n_steps: int                # super-steps in the executed schedule
     n_blocks: int               # real (non-padding) blocks executed
+    device_gmem_words: int = 0  # words the stacked gmem allocation holds
+    useful_gmem_words: int = 0  # words the launches actually asked for
 
     @property
     def kernel_cycles(self) -> int:
         return int(self.per_sm_cycles.max())
+
+    @property
+    def padded_gmem_words(self) -> int:
+        """Memory the bucketing wasted: allocation minus requested words.
+
+        This is the per-dispatch-group cost the drain policies minimize —
+        a monolithic drain pads every tenant to the batch-wide max gmem
+        bucket; bucket-keyed sub-batching keeps it near zero.
+        """
+        return self.device_gmem_words - self.useful_gmem_words
+
+    @property
+    def occupancy(self) -> float:
+        """Fraction of SM-step slots holding a real (non-padding) block."""
+        slots = self.n_steps * self.n_sm
+        return self.n_blocks / slots if slots else 0.0
 
 
 class LaunchSpec(NamedTuple):
@@ -217,7 +235,9 @@ class DeviceGrid:
             n_sm=self.n_sm,
             per_sm_cycles=(hi_lo[0] << 16) + hi_lo[1],
             n_steps=self.n_steps,
-            n_blocks=int(sum(self._blocks)))
+            n_blocks=int(sum(self._blocks)),
+            device_gmem_words=int(np.prod(self._gmems.shape)),
+            useful_gmem_words=int(sum(self._orig_lens)))
 
     def to_results(self) -> List[GridResult]:
         """Materialize one :class:`GridResult` per launch (host sync)."""

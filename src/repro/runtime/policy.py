@@ -1,0 +1,203 @@
+"""Drain policies — memory-aware window packing for the multi-tenant server.
+
+The paper's multiprocessor scaling story (§4.3) is about keeping every
+SM busy without one kernel's footprint starving the rest.  The serving
+analogue: :class:`RuntimeServer` drains a window of pending launches in
+one pass, and *how that window is cut into dispatch groups* decides both
+device memory (every group member pads to the group-wide gmem bucket)
+and lockstep efficiency (a group runs as long as its longest block).
+This module makes that cut pluggable:
+
+* :class:`MonolithicDrain` — the pre-policy behaviour: one dispatch
+  group per window, every tenant padded to the batch-wide max bucket.
+  Kept as the baseline the bucketed policies are measured against.
+* :class:`BucketDrain` — sub-batches the window by ``(gmem bucket,
+  binary)``, like the existing same-binary packing: a dispatch group
+  never pads a small tenant's memory to a large tenant's bucket, and
+  groups stay homogeneous in code and width.
+* :class:`FairBucketDrain` — BucketDrain plus round-robin window
+  composition across tenants, so one chatty tenant cannot monopolize
+  the SM slots of a bounded window.
+
+All policies are functionally interchangeable: launches own disjoint
+memories, so every ticket's result is bit-exact with a sequential
+``run_grid`` regardless of the cut — enforced by the differential fuzz
+suite in ``tests/test_server_policies.py``.
+
+The module also holds the server's admission-control error and the
+per-tenant / per-bucket accounting records surfaced through
+``RuntimeServer`` stats and the ``gpgpu_serve`` CLI.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, NamedTuple, Sequence, Union
+
+from . import registry as reg
+from .registry import ModuleRegistry
+
+
+class AdmissionError(RuntimeError):
+    """Raised by ``submit`` when backpressure rejects a launch at the
+    door: the bounded queue is full or the tenant's in-flight cap is
+    reached.  The client should drain (or wait for the server to) and
+    resubmit; nothing was enqueued."""
+
+
+@dataclasses.dataclass
+class TenantStats:
+    """Cumulative per-tenant serving accounting."""
+    launches: int = 0           # launches drained successfully
+    blocks: int = 0             # thread blocks those launches ran
+    useful_gmem_words: int = 0  # words the tenant's launches asked for
+    padded_gmem_words: int = 0  # bucket padding its allocations carried
+    rejected: int = 0           # submissions bounced by admission control
+    dropped: int = 0            # launches dropped after MAX_ATTEMPTS
+
+
+@dataclasses.dataclass
+class BucketStats:
+    """Cumulative per-gmem-bucket dispatch accounting."""
+    launches: int = 0
+    sub_batches: int = 0        # dispatch groups executed in this bucket
+    blocks: int = 0
+    sm_steps: int = 0           # super-steps those groups occupied
+    sm_slots: int = 0           # sm_steps * n_sm (block capacity)
+    useful_gmem_words: int = 0
+    padded_gmem_words: int = 0
+
+    @property
+    def occupancy(self) -> float:
+        """Fraction of SM-step slots that held a real block."""
+        return self.blocks / self.sm_slots if self.sm_slots else 0.0
+
+
+class SubBatch(NamedTuple):
+    """One dispatch group cut from a drain window by a policy."""
+    requests: tuple             # of server.LaunchRequest, window order
+    gmem_bucket: int            # the group's shared gmem allocation width
+    pad_warps: int              # the group's shared (bucketed) SM width
+
+
+def request_footprint(request, registry: ModuleRegistry) -> reg.Footprint:
+    """Bucketed footprint of one pending request — the axes dispatch
+    groups are keyed on.  Specs enqueued by the server already carry
+    Modules, so this never re-hashes a binary."""
+    mod = registry.as_module(request.spec.code)
+    return reg.footprint(mod, request.spec.block_dim,
+                         int(request.spec.gmem.shape[0]))
+
+
+def _make_sub_batch(requests: Sequence,
+                    registry: ModuleRegistry) -> SubBatch:
+    fps = [request_footprint(r, registry) for r in requests]
+    return SubBatch(
+        requests=tuple(requests),
+        gmem_bucket=max(fp.gmem_bucket for fp in fps),
+        pad_warps=max(fp.warp_bucket for fp in fps))
+
+
+class DrainPolicy:
+    """How a drain window is composed and cut into dispatch groups.
+
+    ``arrange`` orders the pending queue before windows are packed off
+    its head (FIFO by default); ``partition`` cuts one packed window
+    into :class:`SubBatch` dispatch groups.  Policies never touch
+    request *contents* — results stay bit-exact with sequential
+    execution for any arrange/partition.
+    """
+
+    name = "base"
+
+    def arrange(self, pending: List) -> List:
+        return list(pending)
+
+    def partition(self, window: Sequence,
+                  registry: ModuleRegistry) -> List[SubBatch]:
+        raise NotImplementedError
+
+    def __repr__(self):
+        return f"{type(self).__name__}()"
+
+
+class MonolithicDrain(DrainPolicy):
+    """One dispatch group per window — the pre-policy super-step.
+
+    Every window-mate pads to the batch-wide max gmem bucket and SM
+    width; same-binary launches are sorted adjacent so lockstep groups
+    inside the executor stay homogeneous.  Baseline for the padded-words
+    accounting of the bucketed policies.
+    """
+
+    name = "monolithic"
+
+    def partition(self, window, registry):
+        ordered = sorted(window,
+                         key=lambda r: registry.as_module(r.spec.code).key)
+        return [_make_sub_batch(ordered, registry)]
+
+
+class BucketDrain(DrainPolicy):
+    """Sub-batch the window by (gmem bucket, binary).
+
+    Dispatch groups are keyed on the launch footprint, so a 64-word
+    reduction never pays a 8192-word transpose tenant's allocation, and
+    each group is homogeneous in binary (hence code bucket and width) —
+    the same-binary packing of the monolithic drain, promoted from a
+    sort to a cut.  Group order follows each group's first submission,
+    keeping drains fair-ish in arrival order.
+    """
+
+    name = "bucket"
+
+    def partition(self, window, registry):
+        groups: Dict[tuple, List] = {}
+        for r in window:
+            fp = request_footprint(r, registry)
+            key = (fp.gmem_bucket, registry.as_module(r.spec.code).key)
+            groups.setdefault(key, []).append(r)
+        return [_make_sub_batch(g, registry) for g in groups.values()]
+
+
+class FairBucketDrain(BucketDrain):
+    """BucketDrain plus round-robin window composition across tenants.
+
+    ``arrange`` interleaves the pending queue one launch per tenant per
+    cycle (stable within a tenant), so a bounded window serves every
+    waiting tenant before any tenant's second launch — one chatty tenant
+    cannot monopolize a window's SM slots.
+    """
+
+    name = "fair"
+
+    def arrange(self, pending):
+        by_client: Dict[str, List] = {}
+        for r in pending:
+            by_client.setdefault(r.client, []).append(r)
+        queues = list(by_client.values())
+        out: List = []
+        while queues:
+            queues = [q for q in queues if q]
+            for q in queues:
+                if q:
+                    out.append(q.pop(0))
+        return out
+
+
+#: CLI / constructor lookup: ``RuntimeServer(policy="bucket")``.
+POLICIES = {p.name: p for p in
+            (MonolithicDrain, BucketDrain, FairBucketDrain)}
+
+
+def make_policy(policy: Union[str, DrainPolicy, None]) -> DrainPolicy:
+    """Coerce a policy name (or pass through an instance)."""
+    if policy is None:
+        return BucketDrain()
+    if isinstance(policy, DrainPolicy):
+        return policy
+    try:
+        return POLICIES[policy]()
+    except KeyError:
+        raise ValueError(
+            f"unknown drain policy {policy!r}; "
+            f"choose from {sorted(POLICIES)}") from None

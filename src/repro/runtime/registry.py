@@ -38,6 +38,10 @@ CODE_BUCKETS = (64, 96, 128, 192, 256)
 #: Smallest global-memory allocation; sizes round up to powers of two.
 GMEM_MIN_WORDS = 64
 
+#: SM-width buckets: a dispatch group's pad_warps rounds up to the next
+#: bucket so sub-batches of nearby widths share one compiled machine.
+WARP_BUCKETS = (1, 2, 4, 8)
+
 
 def bucket(n: int, table, step: int) -> int:
     """Smallest table bucket holding ``n``; beyond the table, the next
@@ -60,6 +64,33 @@ def bucket_gmem_len(n_words: int) -> int:
     while b < n_words:
         b *= 2
     return b
+
+
+def bucket_warps(n_warps: int) -> int:
+    """SM-width bucket: pow2 up to 8 warps, then multiples of 8."""
+    return bucket(n_warps, WARP_BUCKETS, 8)
+
+
+class Footprint(NamedTuple):
+    """The bucketed shape one launch occupies on the machine.
+
+    Dispatch groups are keyed on these three axes: launches with equal
+    footprints share every padded array shape, so batching them costs no
+    padding at all, and the drain policies use ``gmem_bucket`` to keep a
+    small tenant out of a large tenant's memory allocation.
+    """
+    code_bucket: int    # padded program length (instructions)
+    gmem_bucket: int    # padded global-memory words (pow2)
+    warp_bucket: int    # padded SM width (warps)
+
+
+def footprint(module: "Module", block_dim, gmem_len: int) -> Footprint:
+    """Bucketed (code, gmem, warps) footprint of one launch."""
+    from . import executor as ex      # cycle-free: executor imports us lazily
+    return Footprint(
+        code_bucket=module.padded_len,
+        gmem_bucket=bucket_gmem_len(gmem_len),
+        warp_bucket=bucket_warps(ex.warps_for(block_dim)))
 
 
 def pad_code(code: np.ndarray, pad_to: Optional[int] = None) -> np.ndarray:

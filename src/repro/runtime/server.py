@@ -1,30 +1,46 @@
-"""Multi-tenant launch queue: batch concurrent launches into SM packs.
+"""Multi-tenant launch queue: policy-cut drain windows over SM packs.
 
 The overlay property makes a soft GPGPU *servable*: kernels are data, so
 one resident machine can run many tenants' binaries back-to-back with no
 reconfiguration.  :class:`RuntimeServer` is that serving layer:
 
 * clients ``submit`` launches (any mix of binaries, geometries and
-  memories) and get a ticket back immediately;
-* ``drain`` packs every pending launch's blocks into one round-robin
-  schedule across ``n_sm`` SMs and executes it in a single pass through
-  :func:`repro.runtime.executor.execute` — all tenants padded to one
-  bucketed shape, so the whole mixed batch reuses **one** compiled
-  machine (a sequential ``run_grid`` loop pays one trace per distinct
-  kernel shape instead);
-* results come back per ticket, with a :class:`DrainStats` reporting
-  launches/sec and the executed per-SM cycle counters.
+  memories) and get a ticket back immediately — or a
+  :class:`~repro.runtime.policy.AdmissionError` when backpressure
+  (bounded queue, per-tenant in-flight cap) rejects at the door;
+* ``drain`` packs pending launches into windows and hands each window
+  to the configured :class:`~repro.runtime.policy.DrainPolicy`, which
+  cuts it into dispatch groups (sub-batches).  The default
+  :class:`~repro.runtime.policy.BucketDrain` keys groups on
+  ``(gmem bucket, binary)`` so a small tenant never pads to a large
+  tenant's memory bucket — the memory-aware scheduling the monolithic
+  super-step lacked;
+* results come back per ticket, with a :class:`DrainStats` carrying the
+  executed per-SM counters plus the padding/occupancy accounting the
+  policies are judged on; ``submit_future`` returns a
+  :class:`~repro.runtime.stream.QueuedLaunch` resolved exactly once,
+  the moment its sub-batch completes.
+
+A failing sub-batch is *isolated*: its window-mates (other sub-batches)
+still execute, its own requests requeue with a bumped retry count —
+retried requests drain in singleton sub-batches so a poisoned launch
+can never re-poison a shared group — and the drain re-raises the first
+failure after finishing everything else, with completed results stashed
+for the next drain to redeem.
 """
 from __future__ import annotations
 
 import time
-from typing import Dict, List, NamedTuple, Optional, Tuple
+from typing import Dict, List, NamedTuple, Optional, Tuple, Union
 
 import numpy as np
 
 from ..core.pipeline import MachineConfig
 from . import executor as ex
+from . import policy as pol
+from .policy import AdmissionError, BucketStats, DrainPolicy, TenantStats
 from .registry import ModuleRegistry
+from .stream import QueuedLaunch, QueuedStream
 
 
 class LaunchRequest(NamedTuple):
@@ -42,18 +58,28 @@ class DrainStats(NamedTuple):
     launches_per_s: float
     per_sm_cycles: np.ndarray    # executed counters for the drained batch
     n_steps: int
+    n_windows: int = 0
+    n_sub_batches: int = 0
+    useful_gmem_words: int = 0   # words the drained launches asked for
+    padded_gmem_words: int = 0   # bucket padding their allocations carried
+    occupancy: float = 0.0       # real blocks / (SM-step slots)
+    by_tenant: Optional[Dict[str, TenantStats]] = None   # this drain only
+    by_bucket: Optional[Dict[int, BucketStats]] = None
 
 
 class RuntimeServer:
     """Batches pending launches from concurrent clients into super-steps."""
 
-    #: a batch is dropped (tickets unredeemable, exception always
-    #: propagated) after this many failed drain attempts
+    #: a request is dropped (ticket unredeemable, its future failed)
+    #: after this many failed drain attempts
     MAX_ATTEMPTS = 3
 
     def __init__(self, n_sm: int = 2, cfg: MachineConfig = MachineConfig(),
                  chunk: Optional[int] = None, max_batch: int = 32,
-                 registry: Optional[ModuleRegistry] = None):
+                 registry: Optional[ModuleRegistry] = None,
+                 policy: Union[str, DrainPolicy, None] = None,
+                 max_pending: Optional[int] = 1024,
+                 max_inflight_per_tenant: Optional[int] = 256):
         self.n_sm = n_sm
         self.cfg = cfg
         # default: one SM-wide super-step per dispatch — small groups
@@ -63,13 +89,39 @@ class RuntimeServer:
         self.chunk = max(2, n_sm) if chunk is None else chunk
         self.max_batch = max_batch
         self.registry = registry or ModuleRegistry(max_modules=1024)
+        self.policy = pol.make_policy(policy)
+        self.max_pending = max_pending
+        self.max_inflight_per_tenant = max_inflight_per_tenant
         self._pending: List[LaunchRequest] = []
-        # results of passes completed inside a drain() that later raised
-        # survive here until the next successful drain redeems them
+        # results of sub-batches completed inside a drain() that later
+        # raised survive here until the next drain redeems them
         self._completed: Dict[int, ex.GridResult] = {}
+        self._futures: Dict[int, QueuedLaunch] = {}
         self._next_ticket = 0
         self.drains = 0
         self.launches_served = 0
+        #: cumulative accounting across all drains
+        self.tenant_stats: Dict[str, TenantStats] = {}
+        self.bucket_stats: Dict[int, BucketStats] = {}
+
+    # ------------------------------------------------------------ admission
+
+    def _admit(self, client: str) -> None:
+        """Backpressure checks — raise before anything is enqueued."""
+        ts = self.tenant_stats.setdefault(client, TenantStats())
+        if self.max_pending is not None and \
+                len(self._pending) >= self.max_pending:
+            ts.rejected += 1
+            raise AdmissionError(
+                f"queue full ({self.max_pending} pending launches); "
+                "drain before submitting more")
+        if self.max_inflight_per_tenant is not None:
+            inflight = sum(1 for r in self._pending if r.client == client)
+            if inflight >= self.max_inflight_per_tenant:
+                ts.rejected += 1
+                raise AdmissionError(
+                    f"tenant {client!r} at its in-flight cap "
+                    f"({self.max_inflight_per_tenant}); drain first")
 
     def submit(self, code, grid, block_dim, gmem,
                client: str = "anon") -> int:
@@ -79,7 +131,9 @@ class RuntimeServer:
         immediately after submitting (device arrays are immutable and
         pass through as-is).  Geometry is validated here so a malformed
         request is rejected at the door instead of poisoning a later
-        ``drain`` window shared with other tenants.
+        ``drain`` window shared with other tenants; admission control
+        (bounded queue, per-tenant cap) rejects with
+        :class:`AdmissionError`.
         """
         gx, gy = grid
         if gx < 1 or gy < 1:
@@ -96,12 +150,30 @@ class RuntimeServer:
             gmem = np.array(gmem, np.int32)   # snapshot (lists included)
         if gmem.ndim != 1:
             raise ValueError(f"gmem must be 1-D, got shape {gmem.shape}")
+        self._admit(client)
         mod = self.registry.as_module(code)
         ticket = self._next_ticket
         self._next_ticket += 1
         self._pending.append(LaunchRequest(
             ticket, client, ex.LaunchSpec(mod, grid, block_dim, gmem)))
         return ticket
+
+    def submit_future(self, code, grid, block_dim, gmem,
+                      client: str = "anon") -> QueuedLaunch:
+        """``submit`` returning a :class:`QueuedLaunch` future instead of
+        a bare ticket.  The future resolves exactly once, the moment its
+        sub-batch completes inside a drain — surviving sub-batched
+        completion order and window-mate failures."""
+        ticket = self.submit(code, grid, block_dim, gmem, client)
+        mod = self._pending[-1].spec.code    # submit stored the Module
+        fut = QueuedLaunch(self, ticket, client, mod, grid, block_dim)
+        self._futures[ticket] = fut
+        return fut
+
+    def stream(self, gmem=None, client: str = "stream") -> QueuedStream:
+        """A CUDA-style in-order stream routed through this server's
+        launch queue (see :class:`QueuedStream`)."""
+        return QueuedStream(self, gmem, client)
 
     def pending(self) -> int:
         return len(self._pending)
@@ -110,77 +182,163 @@ class RuntimeServer:
         """Most blocks one executor pass can attribute exactly."""
         return (1 << 15) * self.n_sm
 
-    def drain(self) -> Tuple[Dict[int, ex.GridResult], DrainStats]:
-        """Execute every pending launch in SM-packed batches.
+    # ---------------------------------------------------------------- drain
 
-        Pops up to ``max_batch`` launches per executor pass (the launch
-        bucket bound) and repeats until the queue is empty.  Returns
-        ``{ticket: GridResult}`` plus batch statistics; per-SM counters
-        are summed over passes (the SMs run the passes back-to-back).
-        Tickets redeemed from a previously-failed drain appear in the
-        results but not in this drain's execution statistics.
+    def _pack_window(self, queue: List[LaunchRequest]
+                     ) -> List[LaunchRequest]:
+        """Pop the next window off ``queue``: bounded by BOTH the launch
+        bucket (max_batch) and the executor's exact-cycle block budget,
+        so a full window of individually-valid launches can never trip
+        the accumulator bound mid-drain (submit() already rejects any
+        single launch that could not fit alone)."""
+        window, blocks_packed = [], 0
+        while queue and len(window) < self.max_batch:
+            nxt = queue[0]
+            nb = nxt.spec.grid[0] * nxt.spec.grid[1]
+            if window and blocks_packed + nb > self.block_budget():
+                break
+            window.append(queue.pop(0))
+            blocks_packed += nb
+        return window
+
+    def _cut(self, window: List[LaunchRequest]) -> List[pol.SubBatch]:
+        """Policy partition, with retried requests isolated first: a
+        launch that already failed once drains in a singleton sub-batch,
+        so whatever poisoned it cannot take fresh window-mates down."""
+        fresh = [r for r in window if r.attempts == 0]
+        retried = [r for r in window if r.attempts > 0]
+        cuts = [pol._make_sub_batch([r], self.registry) for r in retried]
+        if fresh:
+            cuts.extend(self.policy.partition(fresh, self.registry))
+        return cuts
+
+    def _account(self, sb: pol.SubBatch, rep: ex.MultiSMReport,
+                 by_tenant: Dict[str, TenantStats],
+                 by_bucket: Dict[int, BucketStats]) -> None:
+        """Charge one completed sub-batch to the per-drain and
+        cumulative per-tenant / per-bucket accounting."""
+        bs_drain = by_bucket.setdefault(sb.gmem_bucket, BucketStats())
+        bs_total = self.bucket_stats.setdefault(sb.gmem_bucket,
+                                                BucketStats())
+        for bs in (bs_drain, bs_total):
+            bs.launches += len(sb.requests)
+            bs.sub_batches += 1
+            bs.blocks += rep.n_blocks
+            bs.sm_steps += rep.n_steps
+            bs.sm_slots += rep.n_steps * rep.n_sm
+            bs.useful_gmem_words += rep.useful_gmem_words
+            bs.padded_gmem_words += rep.padded_gmem_words
+        for r in sb.requests:
+            useful = int(r.spec.gmem.shape[0])
+            padded = sb.gmem_bucket - useful
+            nb = r.spec.grid[0] * r.spec.grid[1]
+            ts_drain = by_tenant.setdefault(r.client, TenantStats())
+            ts_total = self.tenant_stats.setdefault(r.client, TenantStats())
+            for ts in (ts_drain, ts_total):
+                ts.launches += 1
+                ts.blocks += nb
+                ts.useful_gmem_words += useful
+                ts.padded_gmem_words += padded
+
+    def drain(self, max_windows: Optional[int] = None
+              ) -> Tuple[Dict[int, ex.GridResult], DrainStats]:
+        """Execute pending launches in policy-cut, SM-packed sub-batches.
+
+        Packs up to ``max_batch`` launches per window (``max_windows``
+        bounds how many windows this call processes; default all), cuts
+        each window into dispatch groups via the drain policy, and runs
+        each group through :func:`repro.runtime.executor.execute` with
+        the group's own gmem bucket and SM width.  Returns ``{ticket:
+        GridResult}`` plus statistics; per-SM counters are summed over
+        groups (the SMs run them back-to-back).  Tickets redeemed from a
+        previously-failed drain appear in the results but not in this
+        drain's execution statistics.
+
+        On a sub-batch failure the remaining sub-batches still execute;
+        the failing group's requests requeue (bumped retry count, tail
+        of the queue) and the first exception re-raises at the end with
+        every completed result stashed for the next drain.
         """
         if not self._pending and not self._completed:
             return {}, DrainStats(0, 0, self.n_sm, 0.0, 0.0,
-                                  np.zeros(self.n_sm, np.int64), 0)
+                                  np.zeros(self.n_sm, np.int64), 0,
+                                  by_tenant={}, by_bucket={})
         t0 = time.perf_counter()
-        # redeem passes completed before a previous drain() raised
+        # redeem sub-batches completed before a previous drain() raised
         results, self._completed = self._completed, {}
         per_sm = np.zeros(self.n_sm, np.int64)
         n_blocks = n_steps = n_launches = 0
-        while self._pending:
-            # pack the window within BOTH the launch bucket (max_batch)
-            # and the executor's exact-cycle block budget, so a full
-            # window of individually-valid launches can never trip the
-            # accumulator bound mid-drain (submit() already rejects any
-            # single launch that could not fit alone)
-            batch, blocks_packed = [], 0
-            while self._pending and len(batch) < self.max_batch:
-                nxt = self._pending[0]
-                nb = nxt.spec.grid[0] * nxt.spec.grid[1]
-                if batch and blocks_packed + nb > self.block_budget():
-                    break
-                batch.append(self._pending.pop(0))
-                blocks_packed += nb
-            # SM-packing policy: schedule same-binary launches adjacently
-            # so lockstep dispatch groups stay homogeneous — a group runs
-            # as long as its longest block, and mixing a 44k-cycle matmul
-            # block with a 400-cycle reduction block would stall the
-            # short one's lanes for the difference.  Stable sort keeps
-            # each launch's blocks in order; cross-launch merge order is
-            # unobservable (disjoint per-launch memories).
-            batch.sort(key=lambda r: self.registry.as_module(
-                r.spec.code).key)
-            # one padded width for the whole batch: every tenant's blocks
-            # run through the same compiled machine
-            pad_warps = max(ex.warps_for(r.spec.block_dim) for r in batch)
-            try:
-                dg = ex.execute([r.spec for r in batch], n_sm=self.n_sm,
-                                cfg=self.cfg, chunk=self.chunk,
-                                pad_warps=pad_warps,
-                                registry=self.registry)
-            except Exception:
-                # keep this drain's completed passes redeemable by the
-                # next drain(), and requeue the failing batch at the
-                # TAIL with a bumped retry count — later submissions
-                # are not starved behind a poisoned window, and a batch
-                # that keeps failing is dropped after MAX_ATTEMPTS
-                # (its tickets die with the raised exception)
-                self._completed.update(results)
-                self._pending.extend(
-                    r._replace(attempts=r.attempts + 1) for r in batch
-                    if r.attempts + 1 < self.MAX_ATTEMPTS)
-                raise
-            for req, res in zip(batch, dg.to_results()):
-                results[req.ticket] = res
-            rep = dg.report()
-            per_sm += rep.per_sm_cycles
-            n_blocks += rep.n_blocks
-            n_steps += rep.n_steps
-            n_launches += len(batch)
+        n_windows = n_sub_batches = 0
+        useful_words = padded_words = sm_slots = 0
+        by_tenant: Dict[str, TenantStats] = {}
+        by_bucket: Dict[int, BucketStats] = {}
+        queue = self.policy.arrange(self._pending)
+        self._pending = []
+        requeue: List[LaunchRequest] = []
+        first_error: Optional[BaseException] = None
+        while queue and (max_windows is None or n_windows < max_windows):
+            window = self._pack_window(queue)
+            n_windows += 1
+            for sb in self._cut(window):
+                try:
+                    dg = ex.execute([r.spec for r in sb.requests],
+                                    n_sm=self.n_sm, cfg=self.cfg,
+                                    chunk=self.chunk,
+                                    pad_warps=sb.pad_warps,
+                                    registry=self.registry)
+                    sub_results = dg.to_results()
+                except Exception as e:
+                    # isolate the failure to this sub-batch: window-mates
+                    # in other sub-batches still complete; this group's
+                    # requests requeue at the TAIL with a bumped retry
+                    # count (drained next time in singleton sub-batches),
+                    # and a request that keeps failing is dropped after
+                    # MAX_ATTEMPTS — its future fails with the exception
+                    if first_error is None:
+                        first_error = e
+                    for r in sb.requests:
+                        if r.attempts + 1 < self.MAX_ATTEMPTS:
+                            requeue.append(
+                                r._replace(attempts=r.attempts + 1))
+                        else:
+                            ts = self.tenant_stats.setdefault(
+                                r.client, TenantStats())
+                            ts.dropped += 1
+                            fut = self._futures.pop(r.ticket, None)
+                            if fut is not None:
+                                fut._fail(e)
+                    continue
+                # resolve futures the moment their sub-batch completes —
+                # exactly once, independent of window completion order
+                for req, res in zip(sb.requests, sub_results):
+                    results[req.ticket] = res
+                    fut = self._futures.pop(req.ticket, None)
+                    if fut is not None:
+                        fut._resolve(res)
+                rep = dg.report()
+                per_sm += rep.per_sm_cycles
+                n_blocks += rep.n_blocks
+                n_steps += rep.n_steps
+                n_launches += len(sb.requests)
+                n_sub_batches += 1
+                useful_words += rep.useful_gmem_words
+                padded_words += rep.padded_gmem_words
+                sm_slots += rep.n_steps * rep.n_sm
+                self._account(sb, rep, by_tenant, by_bucket)
+        # anything not drained this call (window bound or failures) goes
+        # back on the queue: unprocessed arrivals first, retries at tail
+        self._pending = queue + requeue
+        if first_error is not None:
+            self._completed.update(results)
+            raise first_error
         wall = time.perf_counter() - t0
         self.drains += 1
         self.launches_served += n_launches
-        stats = DrainStats(n_launches, n_blocks, self.n_sm, wall,
-                           n_launches / max(wall, 1e-9), per_sm, n_steps)
+        stats = DrainStats(
+            n_launches, n_blocks, self.n_sm, wall,
+            n_launches / max(wall, 1e-9), per_sm, n_steps,
+            n_windows=n_windows, n_sub_batches=n_sub_batches,
+            useful_gmem_words=useful_words, padded_gmem_words=padded_words,
+            occupancy=n_blocks / sm_slots if sm_slots else 0.0,
+            by_tenant=by_tenant, by_bucket=by_bucket)
         return results, stats

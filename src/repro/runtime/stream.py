@@ -76,25 +76,37 @@ class Launch:
 
 
 class Event:
-    """Snapshot of a stream's tail, for cross-stream ordering and sync."""
+    """Snapshot of a stream's tail, for cross-stream ordering and sync.
 
-    def __init__(self, gmem: jnp.ndarray, launches: List[Launch]):
+    ``gmem`` may be None when the recording stream's tail is a queued
+    (server-routed) launch whose memory does not exist until its drain
+    sub-batch completes: ``query`` stays False until then, and reading
+    the event (``gmem()`` / ``token()`` / ``synchronize()``) forces the
+    producer to resolve first — the event fires only after its
+    producer's sub-batch.
+    """
+
+    def __init__(self, gmem: Optional[jnp.ndarray], launches: List):
         self._gmem = gmem
         self._launches = list(launches)
 
     def gmem(self) -> jnp.ndarray:
         """The recorded stream memory (device array, no sync)."""
+        if self._gmem is None:
+            self._gmem = self._launches[-1].gmem()
         return self._gmem
 
     def token(self) -> jnp.ndarray:
-        return _order_token(self._gmem)
+        return _order_token(self.gmem())
 
     def query(self) -> bool:
         """True when every recorded launch has completed (non-blocking)."""
         return all(l.done() for l in self._launches)
 
     def synchronize(self) -> "Event":
-        jax.block_until_ready(self._gmem)
+        for l in self._launches:
+            l.wait()
+        jax.block_until_ready(self.gmem())
         return self
 
 
@@ -163,6 +175,150 @@ class Stream:
     def synchronize(self) -> "Stream":
         if self._gmem is not None:
             jax.block_until_ready(self._gmem)
+        return self
+
+
+class QueuedLaunch:
+    """Future for a launch queued on a :class:`RuntimeServer`.
+
+    Unlike the eager :class:`Launch` (whose work is already dispatched),
+    a queued launch has no result until the server drains the sub-batch
+    its drain policy assigned it to.  The server resolves the future the
+    moment that sub-batch completes — **exactly once**, whatever order
+    the policy ran the window's sub-batches in, and even when a later
+    sub-batch of the same drain fails.  ``result``/``gmem``/``wait``
+    flush the server when called early; ``done`` never blocks.
+    """
+
+    def __init__(self, server, ticket: int, client: str, module: Module,
+                 grid, block_dim):
+        self._server = server
+        self.ticket = ticket
+        self.client = client
+        self.module = module
+        self.grid = grid
+        self.block_dim = block_dim
+        self._result: Optional[ex.GridResult] = None
+        self._error: Optional[BaseException] = None
+        self._resolved = False
+
+    def _resolve(self, result: ex.GridResult) -> None:
+        if self._resolved:
+            raise RuntimeError(
+                f"ticket {self.ticket} future resolved twice")
+        self._resolved = True
+        self._result = result
+
+    def _fail(self, error: BaseException) -> None:
+        if self._resolved:
+            raise RuntimeError(
+                f"ticket {self.ticket} future resolved twice")
+        self._resolved = True
+        self._error = error
+
+    def done(self) -> bool:
+        """Non-blocking: has this launch's sub-batch completed?"""
+        return self._resolved
+
+    def result(self) -> ex.GridResult:
+        """The launch's :class:`GridResult`; drains the server if needed."""
+        if not self._resolved:
+            try:
+                self._server.drain()
+            except Exception:
+                # another sub-batch of the drain failed — only propagate
+                # if *our* sub-batch did not complete
+                if not self._resolved:
+                    raise
+        if self._error is not None:
+            raise self._error
+        if self._result is None:
+            raise RuntimeError(
+                f"ticket {self.ticket} did not resolve in drain (queued "
+                "behind a failing window? drain again)")
+        return self._result
+
+    def gmem(self) -> jnp.ndarray:
+        """Final global memory (resolves the future first)."""
+        return jnp.asarray(self.result().gmem, jnp.int32)
+
+    def wait(self) -> "QueuedLaunch":
+        self.result()
+        return self
+
+
+class QueuedStream:
+    """In-order launch queue routed through a :class:`RuntimeServer`.
+
+    The server-side sibling of :class:`Stream`: launches enqueue instead
+    of dispatching eagerly, and the drain policy may land a stream's
+    launches in *different sub-batches* (different gmem buckets).
+    Dataflow order survives that: a launch chaining on the stream memory
+    resolves its predecessor first (flushing the server), so the
+    consumer always reads the producer's completed output, whatever
+    sub-batch either fell into.  ``record_event`` snapshots the tail —
+    before resolution if the tail is still queued, so cross-stream
+    consumers observe the event firing only after the producer's
+    sub-batch completes.
+    """
+
+    def __init__(self, server, gmem=None, client: str = "stream"):
+        self._srv = server
+        self.client = client
+        self._gmem = None if gmem is None else np.asarray(gmem, np.int32)
+        self._tail: Optional[QueuedLaunch] = None
+
+    @property
+    def gmem(self):
+        """Current stream memory (resolves a queued tail first)."""
+        if self._tail is not None:
+            return self._tail.gmem()
+        return self._gmem
+
+    def launch(self, module, grid, block_dim, gmem=None) -> QueuedLaunch:
+        """Enqueue one kernel on the server; returns a queued future.
+
+        ``gmem=None`` chains on the stream memory (resolving the queued
+        predecessor first — in-stream dataflow order); an explicit
+        array / future / :class:`Event` reads that memory instead.
+        """
+        if gmem is None:
+            if self._tail is not None:
+                g = np.asarray(self._tail.gmem())
+            elif self._gmem is not None:
+                g = self._gmem
+            else:
+                raise ValueError("stream has no memory: pass gmem= first")
+        elif isinstance(gmem, (Launch, QueuedLaunch, Event)):
+            g = np.asarray(gmem.gmem())
+        else:
+            g = np.asarray(gmem, np.int32)
+        fut = self._srv.submit_future(module, grid, block_dim, g,
+                                      client=self.client)
+        self._tail = fut
+        return fut
+
+    def record_event(self) -> Event:
+        if self._tail is None and self._gmem is None:
+            raise ValueError("cannot record an event on an empty stream")
+        if self._tail is None:
+            return Event(jnp.asarray(self._gmem, jnp.int32), [])
+        # queued tail: the event's memory materializes with the tail's
+        # sub-batch; query() stays False until then
+        return Event(None, [self._tail])
+
+    def wait_event(self, event: Event) -> "QueuedStream":
+        """Order subsequent launches of this stream after ``event``.
+
+        Server submission is host-ordered, so the edge is enforced by
+        resolving the event's producers before anything later enqueues.
+        """
+        event.synchronize()
+        return self
+
+    def synchronize(self) -> "QueuedStream":
+        if self._tail is not None:
+            self._tail.wait()
         return self
 
 

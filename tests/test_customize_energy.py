@@ -1,0 +1,247 @@
+"""Coverage for core/customize.py + core/energy.py (paper §4/§5, Table 6).
+
+The load-bearing invariant: architectural customization is a *timing and
+energy* statement, never a functional one.  Running a benchmark on its
+minimal catalog variant (smaller warp stack, no multiplier, two read
+ports) must leave global memory — and, on this machine, the cycle
+counters — bit-identical to the full baseline; only the energy
+accounting moves (idle units disappear).  Plus unit coverage for the
+static binary analysis that picks the variant and the activity-based
+energy model's internal consistency.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import asm, customize, energy, isa, scheduler
+from repro.core.machine import MachineConfig
+from repro.core.programs import ALL
+
+#: Table 6: the smallest catalog variant each paper benchmark validates
+#: on.  bitonic is the only multiplier-free kernel; everything else
+#: needs the DSP array but only a depth-2 warp stack.
+EXPECTED_VARIANT = {
+    "autocorr": "stack2",
+    "bitonic": "stack2_nomul",
+    "matmul": "stack2",
+    "reduction": "stack2",
+    "transpose": "stack2",
+}
+
+_runs = {}
+
+
+def _run(name, cfg):
+    key = (name, cfg)
+    if key not in _runs:
+        mod = ALL[name]
+        code = mod.build(32)
+        g0 = mod.make_gmem(np.random.default_rng(0), 32)
+        _runs[key] = (scheduler.run_grid(code, *mod.launch(32), g0.copy(),
+                                         cfg), mod, g0)
+    return _runs[key]
+
+
+# ------------------------------------------------------ variant catalog
+
+@pytest.mark.parametrize("name", sorted(ALL))
+def test_table6_variant_selection(name):
+    """select_variant picks the expected Table 6 catalog entry, and the
+    pick actually validates for the binary."""
+    code = ALL[name].build(32)
+    variant = customize.select_variant(code)
+    assert variant == EXPECTED_VARIANT[name]
+    assert customize.validate(code, customize.VARIANT_CATALOG[variant]) \
+        == []
+
+
+@pytest.mark.parametrize("name", sorted(ALL))
+def test_minimal_config_validates_and_never_upsizes(name):
+    """minimal_config is valid for its binary and only ever shrinks the
+    baseline (customization removes units, never adds them)."""
+    code = ALL[name].build(32)
+    base = MachineConfig()
+    mcfg = customize.minimal_config(code, base)
+    assert customize.validate(code, mcfg) == []
+    assert mcfg.warp_stack_depth <= base.warp_stack_depth
+    assert mcfg.num_read_operands <= base.num_read_operands
+    assert (not mcfg.enable_mul) or base.enable_mul
+
+
+@pytest.mark.parametrize("name", sorted(ALL))
+def test_customized_variant_gmem_invariant(name):
+    """ISSUE invariant: a customized variant never changes gmem results
+    (or cycle counters) — only the energy accounting."""
+    code = ALL[name].build(32)
+    base = MachineConfig()
+    mcfg = customize.minimal_config(code, base)
+    assert mcfg != base                      # customization really bites
+    res_base, mod, g0 = _run(name, base)
+    res_min, _, _ = _run(name, mcfg)
+    np.testing.assert_array_equal(res_min.gmem, res_base.gmem)
+    np.testing.assert_array_equal(res_min.cycles_per_block,
+                                  res_base.cycles_per_block)
+    np.testing.assert_array_equal(res_min.op_issues, res_base.op_issues)
+    np.testing.assert_array_equal(res_min.op_lanes, res_base.op_lanes)
+    # ... and the oracle still holds on the customized datapath
+    np.testing.assert_array_equal(res_min.gmem[mod.out_slice(32)],
+                                  mod.oracle(g0, 32))
+
+
+@pytest.mark.parametrize("name", sorted(ALL))
+def test_customized_variant_lowers_energy(name):
+    """Table 6's point: the minimal variant strictly reduces dynamic
+    energy for the same run (idle multiplier/stack/port units gone)."""
+    code = ALL[name].build(32)
+    base = MachineConfig()
+    mcfg = customize.minimal_config(code, base)
+    res_base, _, _ = _run(name, base)
+    res_min, _, _ = _run(name, mcfg)
+    e_base = energy.simt_energy(res_base, base)
+    e_min = energy.simt_energy(res_min, mcfg)
+    assert e_min.total < e_base.total
+    # only the idle component may move: the activity events are a
+    # function of the (identical) counters alone
+    for comp, val in e_base.by_component.items():
+        if comp != "idle":
+            assert e_min.by_component[comp] == pytest.approx(val)
+    assert e_min.by_component["idle"] < e_base.by_component["idle"]
+
+
+def test_variant_catalog_shapes():
+    """The four-bitstream catalog of §5.2, ordered largest to smallest
+    (select_variant scans it in reverse)."""
+    assert list(customize.VARIANT_CATALOG) == \
+        ["baseline", "stack16", "stack2", "stack2_nomul"]
+    assert customize.VARIANT_CATALOG["baseline"] == MachineConfig()
+    nomul = customize.VARIANT_CATALOG["stack2_nomul"]
+    assert not nomul.enable_mul and nomul.num_read_operands == 2
+
+
+# ----------------------------------------------------- static analysis
+
+def _divergent_program(nesting=1):
+    p = asm.Program("div")
+    p.s2r("r0", isa.SR_TID)
+    for i in range(nesting):
+        p.ssy(f"join{i}")
+    p.isetp("p0", "r0", 0)
+    p.guard("p0", "GT").bra(f"join{nesting - 1}")
+    p.iadd("r1", "r0", 1)
+    for i in reversed(range(nesting)):
+        p.label(f"join{i}", sync=True)
+    p.exit()
+    return p.finish(pad_to=96)
+
+
+def _straightline_program(with_mul=False, with_imad=False):
+    p = asm.Program("line")
+    p.s2r("r0", isa.SR_TID)
+    p.iadd("r1", "r0", 2)
+    if with_mul:
+        p.imul("r2", "r1", "r1")
+    if with_imad:
+        p.imad("r2", "r1", "r1", "r0")
+    p.exit()
+    return p.finish(pad_to=96)
+
+
+def test_analyze_straightline_needs_no_stack():
+    prof = customize.analyze(_straightline_program())
+    assert prof.max_ssy_nesting == 0
+    assert not prof.has_divergent_branches
+    assert prof.required_stack_depth == 0
+    assert not prof.uses_mul and not prof.uses_third_operand
+
+
+def test_analyze_mul_and_third_operand_detection():
+    prof_mul = customize.analyze(_straightline_program(with_mul=True))
+    assert prof_mul.uses_mul and not prof_mul.uses_third_operand
+    prof_mad = customize.analyze(_straightline_program(with_imad=True))
+    assert prof_mad.uses_mul and prof_mad.uses_third_operand
+
+
+def test_analyze_ssy_nesting_depth():
+    """Each open SSY scope costs two stack entries (RECONV + TAKEN)."""
+    for nesting in (1, 2):
+        prof = customize.analyze(_divergent_program(nesting))
+        assert prof.max_ssy_nesting == nesting
+        assert prof.has_divergent_branches
+        assert prof.required_stack_depth == 2 * nesting
+
+
+def test_analyze_opcode_histogram_counts():
+    code = _straightline_program(with_mul=True)
+    prof = customize.analyze(code)
+    # EXIT appears once in the body plus once per padding row: only the
+    # s2r/iadd/imul rows are not EXITs
+    assert prof.opcode_histogram[isa.EXIT] == 96 - 3
+    assert prof.opcode_histogram[isa.IMUL] == 1
+    assert sum(prof.opcode_histogram) == 96
+
+
+def test_validate_reports_every_mismatch():
+    code = _straightline_program(with_imad=True)
+    problems = customize.validate(
+        code, customize.VARIANT_CATALOG["stack2_nomul"])
+    assert any("multiplier" in p for p in problems)
+    assert any("third read port" in p for p in problems)
+    deep = _divergent_program(nesting=2)       # needs depth 4
+    problems = customize.validate(
+        deep, dataclasses.replace(MachineConfig(), warp_stack_depth=2))
+    assert any("stack" in p for p in problems)
+    assert customize.validate(deep, MachineConfig()) == []
+
+
+def test_minimal_config_covers_divergence():
+    """Divergent code gets exactly the stack its nesting bound needs."""
+    mcfg = customize.minimal_config(_divergent_program(nesting=2))
+    assert mcfg.warp_stack_depth == 4
+    mcfg1 = customize.minimal_config(_divergent_program(nesting=1))
+    assert mcfg1.warp_stack_depth == 2
+
+
+# -------------------------------------------------------- energy model
+
+def test_energy_components_sum_to_total():
+    res, _, _ = _run("autocorr", MachineConfig())
+    for rep in (energy.simt_energy(res, MachineConfig()),
+                energy.scalar_energy(res, ALL["autocorr"].n_threads(32))):
+        assert rep.total == pytest.approx(sum(rep.by_component.values()))
+        assert all(v >= 0 for v in rep.by_component.values())
+        assert "E=" in str(rep)
+
+
+@pytest.mark.parametrize("name", sorted(ALL))
+def test_table5_simt_beats_scalar_energy(name):
+    """Table 5's claim holds for every benchmark: the SM finishes the
+    same dynamic work for less model energy than the scalar core."""
+    res, mod, _ = _run(name, MachineConfig())
+    e_simt = energy.simt_energy(res, MachineConfig()).total
+    e_scal = energy.scalar_energy(res, mod.n_threads(32)).total
+    assert e_simt < e_scal
+
+
+def test_energy_idle_scales_with_sm_count():
+    """Twice the SMs clock twice the idle fabric per cycle, but the
+    kernel finishes in fewer cycles — the activity part is unchanged."""
+    res, _, _ = _run("transpose", MachineConfig())
+    e1 = energy.simt_energy(res, MachineConfig(), n_sm=1)
+    e2 = energy.simt_energy(res, MachineConfig(), n_sm=2)
+    for comp in e1.by_component:
+        if comp != "idle":
+            assert e2.by_component[comp] == pytest.approx(
+                e1.by_component[comp])
+    per_cycle_1 = e1.by_component["idle"] / res.sm_cycles(1)
+    per_cycle_2 = e2.by_component["idle"] / res.sm_cycles(2)
+    assert per_cycle_2 == pytest.approx(2 * per_cycle_1)
+
+
+def test_scalar_model_cycles_positive_and_linear_in_threads():
+    res, mod, _ = _run("bitonic", MachineConfig())
+    c32 = energy.scalar_model_cycles(res, 32)
+    c64 = energy.scalar_model_cycles(res, 64)
+    assert c32 > 0
+    assert c64 - c32 == pytest.approx(
+        32 * energy.SCALAR_THREAD_OVERHEAD)

@@ -1,0 +1,559 @@
+"""Differential fuzz + ordering suite for the drain-policy server.
+
+The acceptance property that lets the drain refactor be aggressive:
+**every** drain policy is functionally invisible.  Launches own disjoint
+memories, so however a window is arranged, cut into sub-batches, padded
+or retried, each ticket's ``GridResult`` must be bit-identical — memory
+AND activity counters — to a sequential ``run_grid`` of that launch
+alone.  The fuzz half of this module drives random multi-tenant
+workloads (random mixes of the five paper kernels, sizes, tenants,
+window bounds and policies) against that oracle; the rest pins the
+scheduling behaviours the policies exist for: bucketed sub-batching
+(padded-words reduction), fair window composition, admission control,
+failure isolation, and future/stream/event ordering under sub-batched
+drains.
+
+The core fuzz is seeded-rng (hypothesis-free) so it always runs; a
+hypothesis-driven generalization rides along where the extra is
+installed, mirroring tests/test_pipeline_equivalence.py.
+"""
+import numpy as np
+import pytest
+
+from repro import runtime as rt
+from repro.core import scheduler
+from repro.core.programs import ALL
+from repro.runtime import policy as pol
+
+try:
+    import hypothesis
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # optional extra: the seeded fuzz still runs
+    hypothesis = None
+
+POLICY_NAMES = ("monolithic", "bucket", "fair")
+
+#: fuzz pool: small launches only (1-4 blocks, warps 1-8) so every
+#: bucketed shape is shared with the rest of the suite's jit caches
+_POOL = (("bitonic", 32), ("bitonic", 64), ("autocorr", 32),
+         ("autocorr", 64), ("reduction", 32), ("transpose", 32))
+
+_seq_memo = {}
+
+
+def _sequential(name, n, gseed):
+    """Memoized sequential run_grid oracle for a pool launch."""
+    key = (name, n, gseed)
+    if key not in _seq_memo:
+        mod = ALL[name]
+        code = mod.build(n)
+        g0 = mod.make_gmem(np.random.default_rng(gseed), n)
+        res = scheduler.run_grid(code, *mod.launch(n), g0.copy())
+        _seq_memo[key] = (code, g0, res)
+    return _seq_memo[key]
+
+
+def _assert_bit_identical(got, want):
+    np.testing.assert_array_equal(got.gmem, want.gmem)
+    np.testing.assert_array_equal(got.cycles_per_block,
+                                  want.cycles_per_block)
+    np.testing.assert_array_equal(got.op_issues, want.op_issues)
+    np.testing.assert_array_equal(got.op_lanes, want.op_lanes)
+    assert got.stack_ops == want.stack_ops
+    assert got.max_sp == want.max_sp
+    assert got.overflow == want.overflow
+
+
+def _fuzz_round(policy, seed, n_launches=None):
+    """One random multi-tenant workload drained under ``policy``; every
+    ticket checked bit-identical to sequential run_grid."""
+    rng = np.random.default_rng(seed)
+    n_launches = n_launches or int(rng.integers(3, 9))
+    srv = rt.RuntimeServer(n_sm=2, policy=policy,
+                           max_batch=int(rng.integers(2, 6)))
+    want = {}
+    for i in range(n_launches):
+        name, n = _POOL[int(rng.integers(len(_POOL)))]
+        gseed = int(rng.integers(4))
+        code, g0, seq = _sequential(name, n, gseed)
+        t = srv.submit(code, *ALL[name].launch(n), g0.copy(),
+                       client=f"tenant{int(rng.integers(3))}")
+        want[t] = seq
+    results, stats = srv.drain()
+    assert sorted(results) == sorted(want)      # every ticket redeemed
+    assert srv.pending() == 0
+    for t, seq in want.items():
+        _assert_bit_identical(results[t], seq)
+    return stats
+
+
+# ------------------------------------------------------ differential fuzz
+
+@pytest.mark.parametrize("policy", POLICY_NAMES)
+@pytest.mark.parametrize("seed", (0, 1, 2))
+def test_fuzz_bit_identical_to_sequential(policy, seed):
+    """Random workloads: results + counters == sequential run_grid."""
+    stats = _fuzz_round(policy, seed=1000 * seed + len(policy))
+    assert stats.n_launches > 0
+    assert stats.per_sm_cycles.sum() > 0
+
+
+@pytest.mark.parametrize("policy", POLICY_NAMES)
+def test_fuzz_same_results_all_policies(policy):
+    """One fixed workload drained under each policy yields the same
+    per-ticket results (the policies agree with each other, not just
+    with the oracle)."""
+    stats = _fuzz_round(policy, seed=424242, n_launches=6)
+    # the bucketed policies never pad beyond the monolithic drain
+    assert stats.padded_gmem_words >= 0
+
+
+def test_fuzz_futures_resolve_exactly_once():
+    """submit_future over a random workload: every future resolves
+    exactly once, independent of sub-batch completion order."""
+    rng = np.random.default_rng(7)
+    srv = rt.RuntimeServer(n_sm=2, policy="bucket", max_batch=3)
+    futs = {}
+    for i in range(6):
+        name, n = _POOL[int(rng.integers(len(_POOL)))]
+        code, g0, seq = _sequential(name, n, 0)
+        fut = srv.submit_future(code, *ALL[name].launch(n), g0.copy(),
+                                client=f"t{i % 2}")
+        futs[fut] = seq
+        assert not fut.done()
+    first = next(iter(futs))
+    first.result()                        # flushes the whole queue
+    for fut, seq in futs.items():
+        assert fut.done()                 # resolved during that drain
+        _assert_bit_identical(fut.result(), seq)
+    # an empty follow-up drain must not touch (re-resolve) anything
+    srv.drain()
+    for fut in futs:
+        assert fut.done()
+
+
+def test_future_double_resolution_guard():
+    """The exactly-once invariant is enforced, not incidental."""
+    code, g0, seq = _sequential("bitonic", 32, 0)
+    srv = rt.RuntimeServer(n_sm=1)
+    fut = srv.submit_future(code, *ALL["bitonic"].launch(32), g0.copy())
+    fut.wait()
+    with pytest.raises(RuntimeError, match="resolved twice"):
+        fut._resolve(fut.result())
+    with pytest.raises(RuntimeError, match="resolved twice"):
+        fut._fail(ValueError("x"))
+
+
+if hypothesis is not None:
+    @settings(max_examples=15, deadline=None)
+    @given(policy=st.sampled_from(POLICY_NAMES),
+           picks=st.lists(st.tuples(st.integers(0, len(_POOL) - 1),
+                                    st.integers(0, 3),
+                                    st.integers(0, 2)),
+                          min_size=1, max_size=6),
+           max_batch=st.integers(1, 5))
+    def test_hypothesis_multi_tenant_differential(policy, picks, max_batch):
+        """Property form of the differential fuzz: any mix of kernels,
+        input seeds, tenants, window bounds and policies is bit-exact
+        with sequential execution and redeems every ticket."""
+        srv = rt.RuntimeServer(n_sm=2, policy=policy, max_batch=max_batch)
+        want = {}
+        for pool_i, gseed, tenant in picks:
+            name, n = _POOL[pool_i]
+            code, g0, seq = _sequential(name, n, gseed)
+            t = srv.submit(code, *ALL[name].launch(n), g0.copy(),
+                           client=f"tenant{tenant}")
+            want[t] = seq
+        results, _ = srv.drain()
+        assert sorted(results) == sorted(want)
+        for t, seq in want.items():
+            _assert_bit_identical(results[t], seq)
+
+
+# ------------------------------------------------- bucketed sub-batching
+
+def test_bucket_partition_keys_groups_by_footprint():
+    """BucketDrain cuts a window by (gmem bucket, binary); monolithic
+    keeps one group padded to the window max."""
+    srv = rt.RuntimeServer(n_sm=2, policy="bucket")
+    for name, n in (("bitonic", 32), ("bitonic", 32), ("autocorr", 32),
+                    ("transpose", 32)):
+        code, g0, _ = _sequential(name, n, 0)
+        srv.submit(code, *ALL[name].launch(n), g0.copy())
+    window = list(srv._pending)
+    cuts = srv.policy.partition(window, srv.registry)
+    keys = sorted((sb.gmem_bucket, len(sb.requests)) for sb in cuts)
+    # bitonic x2 share a (64, binary) group; autocorr its own 64-word
+    # group; transpose alone in the 2048 bucket
+    assert keys == [(64, 1), (64, 2), (2048, 1)]
+    mono = pol.MonolithicDrain().partition(window, srv.registry)
+    assert len(mono) == 1
+    assert mono[0].gmem_bucket == 2048      # everyone pads to the max
+    srv._pending.clear()
+
+
+def test_skewed_workload_padded_words_reduction():
+    """ISSUE acceptance: one large-bucket tenant + seven small ones —
+    bucket-sub-batched drain cuts total padded gmem words per window by
+    >= 4x vs the monolithic drain, with bit-identical results."""
+    from repro.launch.gpgpu_serve import build_skewed_workload
+    work = build_skewed_workload(n_small=7)
+    padded = {}
+    for polname in ("monolithic", "bucket"):
+        srv = rt.RuntimeServer(n_sm=2, policy=polname)
+        want = {}
+        for i, (name, mod, n, code, (grid, bd), g0) in enumerate(work):
+            t = srv.submit(code, grid, bd, g0.copy(), client=f"t{i}")
+            want[t] = scheduler.run_grid(code, grid, bd, g0.copy())
+        results, stats = srv.drain()
+        assert stats.n_windows == 1           # one window: same composition
+        for t, seq in want.items():
+            _assert_bit_identical(results[t], seq)
+        padded[polname] = stats.padded_gmem_words
+    assert padded["monolithic"] >= 4 * max(padded["bucket"], 1)
+
+
+def test_drain_stats_accounting_consistent():
+    """Per-tenant and per-bucket accounting tie out against the drain
+    totals, and occupancy is a real fraction."""
+    stats = _fuzz_round("bucket", seed=99, n_launches=7)
+    assert sum(ts.launches for ts in stats.by_tenant.values()) == \
+        stats.n_launches
+    assert sum(bs.launches for bs in stats.by_bucket.values()) == \
+        stats.n_launches
+    assert sum(bs.sub_batches for bs in stats.by_bucket.values()) == \
+        stats.n_sub_batches
+    assert sum(bs.useful_gmem_words for bs in stats.by_bucket.values()) \
+        == stats.useful_gmem_words
+    assert sum(bs.padded_gmem_words for bs in stats.by_bucket.values()) \
+        == stats.padded_gmem_words
+    assert sum(ts.useful_gmem_words for ts in stats.by_tenant.values()) \
+        == stats.useful_gmem_words
+    assert 0.0 < stats.occupancy <= 1.0
+    for bs in stats.by_bucket.values():
+        assert 0.0 < bs.occupancy <= 1.0
+
+
+def test_server_cumulative_stats_accumulate():
+    """self.tenant_stats / bucket_stats aggregate across drains."""
+    srv = rt.RuntimeServer(n_sm=2, policy="bucket")
+    code, g0, _ = _sequential("bitonic", 32, 0)
+    for _ in range(2):
+        srv.submit(code, *ALL["bitonic"].launch(32), g0.copy(),
+                   client="alice")
+        srv.drain()
+    assert srv.tenant_stats["alice"].launches == 2
+    assert srv.bucket_stats[64].launches == 2
+    assert srv.bucket_stats[64].sub_batches == 2
+    assert srv.launches_served == 2
+
+
+# ------------------------------------------------------ fairness + window
+
+def test_fair_policy_round_robins_tenants():
+    """A bounded window serves every waiting tenant before any tenant's
+    second launch: chatty alice cannot monopolize the SM slots."""
+    srv = rt.RuntimeServer(n_sm=2, policy="fair", max_batch=3)
+    code, g0, _ = _sequential("bitonic", 32, 0)
+    launch = ALL["bitonic"].launch(32)
+    t_alice = [srv.submit(code, *launch, g0.copy(), client="alice")
+               for _ in range(3)]
+    t_bob = srv.submit(code, *launch, g0.copy(), client="bob")
+    t_carol = srv.submit(code, *launch, g0.copy(), client="carol")
+    results, stats = srv.drain(max_windows=1)
+    assert sorted(results) == sorted([t_alice[0], t_bob, t_carol])
+    assert srv.pending() == 2                 # alice's 2nd and 3rd wait
+    assert stats.by_tenant["alice"].launches == 1
+    rest, _ = srv.drain()
+    assert sorted(rest) == sorted(t_alice[1:])
+
+
+def test_fifo_policy_preserves_submission_order_in_window():
+    """Default arrange is FIFO: a bounded window takes the head of the
+    queue, chatty tenant and all."""
+    srv = rt.RuntimeServer(n_sm=2, policy="bucket", max_batch=3)
+    code, g0, _ = _sequential("bitonic", 32, 0)
+    launch = ALL["bitonic"].launch(32)
+    t_alice = [srv.submit(code, *launch, g0.copy(), client="alice")
+               for _ in range(3)]
+    t_bob = srv.submit(code, *launch, g0.copy(), client="bob")
+    results, _ = srv.drain(max_windows=1)
+    assert sorted(results) == sorted(t_alice)
+    assert srv.pending() == 1
+    assert t_bob in srv.drain()[0]
+
+
+def test_arrange_round_robin_is_stable_within_tenant():
+    """FairBucketDrain.arrange interleaves one-per-tenant per cycle and
+    never reorders a tenant's own launches."""
+    reqs = [rt.LaunchRequest(i, c, None) for i, c in
+            enumerate(["a", "a", "b", "a", "c", "b"])]
+    out = pol.FairBucketDrain().arrange(reqs)
+    assert [r.ticket for r in out] == [0, 2, 4, 1, 5, 3]
+    a_order = [r.ticket for r in out if r.client == "a"]
+    assert a_order == sorted(a_order)
+
+
+# ---------------------------------------------------- admission control
+
+def test_admission_bounded_queue():
+    srv = rt.RuntimeServer(n_sm=1, max_pending=2)
+    code, g0, _ = _sequential("bitonic", 32, 0)
+    launch = ALL["bitonic"].launch(32)
+    srv.submit(code, *launch, g0.copy(), client="a")
+    srv.submit(code, *launch, g0.copy(), client="b")
+    with pytest.raises(rt.AdmissionError, match="queue full"):
+        srv.submit(code, *launch, g0.copy(), client="c")
+    assert srv.tenant_stats["c"].rejected == 1
+    assert srv.pending() == 2                 # nothing half-enqueued
+    srv.drain()
+    srv.submit(code, *launch, g0.copy(), client="c")   # room again
+
+
+def test_admission_per_tenant_inflight_cap():
+    srv = rt.RuntimeServer(n_sm=1, max_inflight_per_tenant=2)
+    code, g0, _ = _sequential("bitonic", 32, 0)
+    launch = ALL["bitonic"].launch(32)
+    srv.submit(code, *launch, g0.copy(), client="greedy")
+    srv.submit(code, *launch, g0.copy(), client="greedy")
+    with pytest.raises(rt.AdmissionError, match="in-flight cap"):
+        srv.submit(code, *launch, g0.copy(), client="greedy")
+    # other tenants are not collateral damage
+    srv.submit(code, *launch, g0.copy(), client="patient")
+    assert srv.tenant_stats["greedy"].rejected == 1
+    results, _ = srv.drain()
+    assert len(results) == 3
+
+
+def test_admission_rejects_before_validation_side_effects():
+    """A rejected submission leaves no ticket, no pending entry and no
+    future behind."""
+    srv = rt.RuntimeServer(n_sm=1, max_pending=1)
+    code, g0, _ = _sequential("bitonic", 32, 0)
+    launch = ALL["bitonic"].launch(32)
+    t0 = srv.submit(code, *launch, g0.copy())
+    with pytest.raises(rt.AdmissionError):
+        srv.submit_future(code, *launch, g0.copy())
+    assert srv.pending() == 1
+    assert srv._futures == {}
+    results, _ = srv.drain()
+    assert list(results) == [t0]
+
+
+# ------------------------------------------------- failure isolation
+
+def _poison(srv, index=-1):
+    """Corrupt a pending request's gmem behind the validator's back."""
+    srv._pending[index] = srv._pending[index]._replace(
+        spec=srv._pending[index].spec._replace(
+            gmem=srv._pending[index].spec.gmem.reshape(2, -1)))
+
+
+def test_poisoned_launch_isolated_to_its_sub_batch():
+    """ISSUE regression: a poisoned launch takes down only its own
+    (bucket, binary) sub-batch — window-mates in other sub-batches
+    complete in the SAME drain and are redeemable from the next."""
+    srv = rt.RuntimeServer(n_sm=2, policy="bucket")
+    c_bit, g_bit, seq_bit = _sequential("bitonic", 32, 0)
+    c_auto, g_auto, seq_auto = _sequential("autocorr", 32, 1)
+    c_tr, g_tr, seq_tr = _sequential("transpose", 32, 2)
+    t_bit = srv.submit(c_bit, *ALL["bitonic"].launch(32), g_bit.copy())
+    t_tr = srv.submit(c_tr, *ALL["transpose"].launch(32), g_tr.copy())
+    fut_auto = srv.submit_future(c_auto, *ALL["autocorr"].launch(32),
+                                 g_auto.copy())
+    t_poison = srv.submit(c_bit, *ALL["bitonic"].launch(32), g_bit.copy())
+    _poison(srv)                 # lands in the (64, bitonic) sub-batch
+    with pytest.raises(Exception):
+        srv.drain()
+    # window-mates in the autocorr and transpose sub-batches completed
+    # inside the failing drain: the future already resolved
+    assert fut_auto.done()
+    _assert_bit_identical(fut_auto.result(), seq_auto)
+    # only the poisoned sub-batch requeued (t_bit shared its binary and
+    # bucket with the poison, so it shares its fate and retries)
+    assert {r.ticket for r in srv._pending} == {t_bit, t_poison}
+    assert all(r.attempts == 1 for r in srv._pending)
+    # un-poison: the retried requests drain in singleton sub-batches
+    srv._pending = [r._replace(spec=r.spec._replace(gmem=g_bit.copy()))
+                    if r.ticket == t_poison else r for r in srv._pending]
+    results, stats = srv.drain()
+    # completed sub-batches from the failed drain redeemed + retries
+    # (fut_auto's ticket reappears: redeemed tickets stay redeemable)
+    assert sorted(results) == sorted([t_bit, t_tr, t_poison,
+                                      fut_auto.ticket])
+    _assert_bit_identical(results[t_tr], seq_tr)
+    _assert_bit_identical(results[t_bit], seq_bit)
+    assert stats.n_sub_batches == 2           # the two singleton retries
+
+
+def test_poisoned_launch_dropped_after_max_attempts():
+    """A request that keeps failing is dropped after MAX_ATTEMPTS and
+    its future fails with the underlying exception; the server keeps
+    serving afterwards."""
+    srv = rt.RuntimeServer(n_sm=1, policy="bucket")
+    code, g0, seq = _sequential("bitonic", 32, 0)
+    launch = ALL["bitonic"].launch(32)
+    fut = srv.submit_future(code, *launch, g0.copy(), client="sick")
+    _poison(srv)
+    for attempt in range(srv.MAX_ATTEMPTS):
+        with pytest.raises(Exception):
+            srv.drain()
+    assert srv.pending() == 0                 # dropped, not looping
+    assert fut.done()
+    with pytest.raises(Exception):
+        fut.result()
+    assert srv.tenant_stats["sick"].dropped == 1
+    # the server is healthy for the next tenant
+    t = srv.submit(code, *launch, g0.copy())
+    results, _ = srv.drain()
+    _assert_bit_identical(results[t], seq)
+
+
+def test_retried_request_cannot_poison_fresh_window_mates():
+    """After one failure a request drains in a singleton sub-batch:
+    fresh same-binary submissions no longer share its fate."""
+    srv = rt.RuntimeServer(n_sm=1, policy="bucket")
+    code, g0, seq = _sequential("bitonic", 32, 0)
+    launch = ALL["bitonic"].launch(32)
+    t_poison = srv.submit(code, *launch, g0.copy())
+    _poison(srv)
+    with pytest.raises(Exception):
+        srv.drain()
+    assert [r.attempts for r in srv._pending] == [1]
+    # fresh launch, same binary + bucket as the poison
+    t_fresh = srv.submit(code, *launch, g0.copy())
+    with pytest.raises(Exception):
+        srv.drain()                           # poison fails again, alone
+    with pytest.raises(Exception):
+        srv.drain()                           # third strike: dropped
+    assert srv.pending() == 0
+    results, _ = srv.drain()                  # redeems the fresh ticket
+    assert t_fresh in results and t_poison not in results
+    _assert_bit_identical(results[t_fresh], seq)
+
+
+# ------------------------------------- streams/events over drain windows
+
+def _kern(region_in, region_out, op):
+    from repro.core import asm, isa
+    p = asm.Program(op)
+    p.s2r("r0", isa.SR_TID)
+    p.ldg("r1", "r0", region_in)
+    if op == "add1":
+        p.iadd("r1", "r1", 1)
+    else:
+        p.iadd("r1", "r1", "r1")
+    p.stg("r0", "r1", region_out)
+    p.exit()
+    return p.finish(pad_to=96)
+
+
+def test_queued_stream_in_order_across_buckets():
+    """In-stream dataflow order survives the policy landing a stream's
+    launches in different sub-batches: chained (x+1)*2 is exact even
+    with a large-bucket tenant sharing every window."""
+    srv = rt.RuntimeServer(n_sm=2, policy="bucket")
+    m1 = srv.registry.load(_kern(0, 64, "add1"), "add1")
+    m2 = srv.registry.load(_kern(64, 128, "double"), "double")
+    # a big-bucket tenant keeps the window heterogeneous
+    c_tr, g_tr, seq_tr = _sequential("transpose", 32, 3)
+    fut_tr = srv.submit_future(c_tr, *ALL["transpose"].launch(32),
+                               g_tr.copy(), client="big")
+    g0 = np.zeros(192, np.int32)
+    g0[:32] = np.arange(32)
+    s = srv.stream(g0, client="chain")
+    a = s.launch(m1, (1, 1), (32, 1))
+    b = s.launch(m2, (1, 1), (32, 1))   # chains on a's resolved output
+    np.testing.assert_array_equal(np.asarray(b.gmem())[128:160],
+                                  (np.arange(32) + 1) * 2)
+    assert a.done() and b.done()
+    _assert_bit_identical(fut_tr.result(), seq_tr)
+    # the two chained launches ran in dataflow order across two drains
+    assert srv.drains >= 2
+
+
+def test_event_fires_only_after_producer_sub_batch():
+    """A cross-stream event on a queued producer reads as not-fired
+    until the producer's sub-batch completes, then carries its memory
+    to the consumer stream."""
+    srv = rt.RuntimeServer(n_sm=1, policy="bucket")
+    m1 = srv.registry.load(_kern(0, 64, "add1"), "add1")
+    m2 = srv.registry.load(_kern(64, 128, "double"), "double")
+    g0 = np.zeros(192, np.int32)
+    g0[:32] = np.arange(32)
+    s1 = srv.stream(g0, client="producer")
+    s1.launch(m1, (1, 1), (32, 1))
+    ev = s1.record_event()
+    assert not ev.query()                 # producer still queued
+    s2 = srv.stream(client="consumer")
+    s2.wait_event(ev)                     # resolves the producer first
+    assert ev.query()
+    c = s2.launch(m2, (1, 1), (32, 1), gmem=ev)
+    np.testing.assert_array_equal(np.asarray(c.gmem())[128:160],
+                                  (np.arange(32) + 1) * 2)
+    ev.synchronize()
+
+
+def test_event_on_healthy_sub_batch_fires_despite_window_failure():
+    """Sub-batched completion is observable: when another sub-batch of
+    the same drain fails, the producer's event still fires."""
+    srv = rt.RuntimeServer(n_sm=1, policy="bucket")
+    m1 = srv.registry.load(_kern(0, 64, "add1"), "add1")
+    g0 = np.zeros(192, np.int32)
+    g0[:32] = np.arange(32)
+    s = srv.stream(g0, client="healthy")
+    s.launch(m1, (1, 1), (32, 1))
+    ev = s.record_event()
+    c_bit, g_bit, _ = _sequential("bitonic", 32, 0)
+    srv.submit(c_bit, *ALL["bitonic"].launch(32), g_bit.copy(),
+               client="sick")
+    _poison(srv)
+    assert not ev.query()
+    with pytest.raises(Exception):
+        srv.drain()
+    assert ev.query()                     # healthy sub-batch completed
+    np.testing.assert_array_equal(np.asarray(ev.gmem())[64:96],
+                                  np.arange(32) + 1)
+    # clear the poisoned retries so nothing leaks into other tests
+    srv._pending.clear()
+
+
+def test_queued_stream_requires_memory():
+    srv = rt.RuntimeServer(n_sm=1)
+    s = srv.stream()
+    with pytest.raises(ValueError, match="no memory"):
+        s.launch(_kern(0, 64, "add1"), (1, 1), (32, 1))
+    with pytest.raises(ValueError, match="empty stream"):
+        s.record_event()
+
+
+# ------------------------------------------------------- policy plumbing
+
+def test_make_policy_coercion():
+    assert isinstance(pol.make_policy(None), pol.BucketDrain)
+    assert isinstance(pol.make_policy("monolithic"), pol.MonolithicDrain)
+    inst = pol.FairBucketDrain()
+    assert pol.make_policy(inst) is inst
+    with pytest.raises(ValueError, match="unknown drain policy"):
+        pol.make_policy("lifo")
+    assert sorted(rt.POLICIES) == ["bucket", "fair", "monolithic"]
+
+
+def test_footprint_and_warp_buckets():
+    assert rt.bucket_warps(1) == 1
+    assert rt.bucket_warps(3) == 4
+    assert rt.bucket_warps(8) == 8
+    assert rt.bucket_warps(9) == 16
+    regy = rt.ModuleRegistry()
+    mod = regy.load(ALL["transpose"].build(32))
+    fp = rt.footprint(mod, (16, 16), 2048)
+    assert fp == rt.Footprint(code_bucket=96, gmem_bucket=2048,
+                              warp_bucket=8)
+
+
+def test_empty_drain_reports_policy_fields():
+    results, stats = rt.RuntimeServer(n_sm=2).drain()
+    assert results == {}
+    assert stats.n_sub_batches == 0 and stats.n_windows == 0
+    assert stats.by_tenant == {} and stats.by_bucket == {}
+    assert stats.padded_gmem_words == 0 and stats.occupancy == 0.0
