@@ -1,0 +1,65 @@
+"""Docs integrity: fail on broken relative links in README.md/docs/*.md.
+
+    python scripts/check_docs.py [repo_root]
+
+Scans every markdown link/image ``[text](target)`` in ``README.md`` and
+``docs/*.md``.  External targets (``http(s)://``, ``mailto:``) and
+pure in-page anchors (``#...``) are skipped; every other target must
+resolve, relative to the file that links it, to an existing file or
+directory (an optional ``#anchor`` suffix is ignored for existence).
+Exit code 1 lists every broken link — the CI docs step runs this, and
+``tests/test_docs_links.py`` runs it in tier-1.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+#: [text](target) — markdown links and images; target ends at the first
+#: unescaped ')' (no nested parens in our docs)
+_LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_SKIP = ("http://", "https://", "mailto:")
+
+
+def doc_files(root: Path):
+    files = []
+    readme = root / "README.md"
+    if readme.exists():
+        files.append(readme)
+    files.extend(sorted((root / "docs").glob("*.md")))
+    return files
+
+
+def broken_links(root: Path):
+    """(file, link, resolved-path) for every dangling relative link."""
+    bad = []
+    for md in doc_files(root):
+        text = md.read_text()
+        # fenced code blocks hold ascii diagrams, not links
+        text = re.sub(r"```.*?```", "", text, flags=re.S)
+        for m in _LINK.finditer(text):
+            target = m.group(1)
+            if target.startswith(_SKIP) or target.startswith("#"):
+                continue
+            path = target.split("#", 1)[0]
+            resolved = (md.parent / path).resolve()
+            if not resolved.exists():
+                bad.append((md.relative_to(root), target, resolved))
+    return bad
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    root = Path(argv[0]).resolve() if argv else \
+        Path(__file__).resolve().parent.parent
+    files = doc_files(root)
+    bad = broken_links(root)
+    for md, target, resolved in bad:
+        print(f"BROKEN {md}: ({target}) -> {resolved}")
+    print(f"checked {len(files)} docs, {len(bad)} broken links")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

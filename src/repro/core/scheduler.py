@@ -16,7 +16,11 @@ benchmarks, examples and tests are agnostic to the runtime refactor.
 replay; it is bit-exact with the executed per-SM counters of
 :meth:`repro.runtime.DeviceGrid.report` (asserted in
 ``tests/test_runtime.py``) and is kept as the post-hoc cross-check that
-works for any ``n_sm`` after a run.
+works for any ``n_sm`` after a run.  ``MultiSMReport`` is re-exported
+here too: its ``kernel_cycles`` (busiest-SM makespan) and
+``busy_cycles`` duration telemetry is what the serving layer's
+cost-model drain policies (``repro.runtime.policy.BalancedDrain``)
+minimize per drain window — see ``docs/runtime-tuning.md``.
 
 The same blocks→SMs round-robin map reappears at cluster scale as the
 data-parallel shard assignment in :mod:`repro.launch.mesh` — the paper's
@@ -25,4 +29,5 @@ scheduling idea lifted from SMs to chips (DESIGN.md §4).
 from __future__ import annotations
 
 from ..runtime.executor import (  # noqa: F401  (re-exported surface)
-    BLOCK_SCHED_OVERHEAD, GridResult, LaunchSpec, execute, run_grid)
+    BLOCK_SCHED_OVERHEAD, GridResult, LaunchSpec, MultiSMReport, execute,
+    run_grid)

@@ -2,7 +2,8 @@
 
     PYTHONPATH=src python -m repro.launch.gpgpu_serve \
         --launches 16 --n-sm 2 --tenants 4 \
-        [--policy bucket|fair|monolithic] [--skewed] [--baseline]
+        [--policy bucket|fair|monolithic|balanced] \
+        [--skewed | --longtail] [--baseline]
 
 Simulated tenants submit a mixed workload — all five paper kernels at
 several input sizes — to the device runtime's launch queue
@@ -13,10 +14,13 @@ recompilation") exercised as a serving layer.  The default ``bucket``
 policy sub-batches by (gmem bucket, binary) so a small tenant never
 pads to a large tenant's memory bucket; ``--skewed`` builds the
 worst-case workload for the monolithic drain (one large-bucket tenant
-plus several small ones) to show the padded-words gap.  Every result
-is oracle-checked.  ``--baseline`` also times one sequential
-``run_grid`` call per launch from cold jit caches and reports the
-throughput ratio.
+plus several small ones) to show the padded-words gap; ``--longtail``
+builds the worst case for the *bucket* drain — many single-block
+binaries of skewed durations, where ``--policy balanced`` packs the
+window by predicted duration (cost-model LPT) and cuts the drain
+makespan.  Every result is oracle-checked.  ``--baseline`` also times
+one sequential ``run_grid`` call per launch from cold jit caches and
+reports the throughput ratio.
 """
 from __future__ import annotations
 
@@ -26,7 +30,7 @@ import time
 import numpy as np
 
 from repro import runtime as rt
-from repro.core import scheduler
+from repro.core import asm, isa, scheduler
 from repro.core.programs import ALL
 
 #: per-kernel tenant input sizes (reduction stays single-pass)
@@ -65,6 +69,75 @@ def build_skewed_workload(n_small: int = 7, seed: int = 0):
         mod = ALL[name]
         work.append((name, mod, 32, mod.build(32), mod.launch(32),
                      mod.make_gmem(np.random.default_rng(seed + 1 + i), 32)))
+    return work
+
+
+class AddK:
+    """Synthetic straightline kernel: ``out[tid] = in[tid] + k``.
+
+    The ``k`` repeated IADDs make per-block duration proportional to
+    ``k`` while every variant shares one footprint (64-instr code
+    bucket, 128-word gmem bucket, 1 warp) — the controlled duration
+    skew the longtail workload needs.  Distinct ``k`` means a distinct
+    binary, so the bucket drain cannot merge them; only duration-aware
+    packing can.  Mirrors the paper-kernel module interface
+    (build/launch/make_gmem/out_slice/oracle) so ``drain_workload``
+    oracle-checks it like any tenant kernel.
+    """
+
+    GMEM_WORDS = 128
+
+    def __init__(self, k: int, in_at: int = 0, out_at: int = 64):
+        assert 1 <= k <= 60, "k+4 instructions must fit the 64 bucket"
+        self.k = k
+        self.in_at = in_at
+        self.out_at = out_at
+
+    def build(self, n=None) -> np.ndarray:
+        p = asm.Program(f"addk{self.k}")
+        p.s2r("r0", isa.SR_TID)
+        p.ldg("r1", "r0", self.in_at)
+        for _ in range(self.k):
+            p.iadd("r1", "r1", 1)
+        p.stg("r0", "r1", self.out_at)
+        p.exit()
+        # unpadded: the registry pads to the shared 64-instr bucket and
+        # keeps n_instr = k+4, so the cost model's program-length seed
+        # really orders the variants before any drain has observed them
+        return p.finish()
+
+    def launch(self, n=None):
+        return (1, 1), (32, 1)
+
+    def make_gmem(self, rng, n=None) -> np.ndarray:
+        g = np.zeros(self.GMEM_WORDS, np.int32)
+        g[self.in_at:self.in_at + 32] = rng.integers(0, 1 << 16, 32)
+        return g
+
+    def out_slice(self, n=None):
+        return slice(self.out_at, self.out_at + 32)
+
+    def oracle(self, g0, n=None):
+        return g0[self.in_at:self.in_at + 32] + self.k
+
+
+def build_longtail_workload(n_launches: int = 8, seed: int = 0):
+    """Skewed-duration workload: single-block binaries, linear duration
+    spread (k = 7, 14, .., 56 — all inside the 64-instr code bucket).
+
+    Every launch shares one footprint but owns a distinct binary, so
+    ``BucketDrain`` cuts the window into one singleton sub-batch per
+    binary — each leaving every SM but one idle, makespan ~= the SUM of
+    all durations.  ``BalancedDrain`` merges the window into one
+    duration-ordered dispatch group whose round-robin positions spread
+    the long blocks across SMs first (greedy LPT): makespan ~= sum/n_sm.
+    """
+    work = []
+    for i in range(n_launches):
+        mod = AddK(7 * (1 + i % 8))
+        work.append((f"addk{mod.k}", mod, 32, mod.build(),
+                     mod.launch(),
+                     mod.make_gmem(np.random.default_rng(seed + i))))
     return work
 
 
@@ -123,6 +196,9 @@ def print_stats(srv, stats, wall: float, n_sm: int, tenants: int) -> None:
           f"useful={stats.useful_gmem_words} "
           f"padded={stats.padded_gmem_words}, "
           f"SM-step occupancy {stats.occupancy:.2f}")
+    print(f"[serve] drain makespan {stats.makespan_cycles} cycles "
+          f"(busy {stats.busy_cycles}, duration balance "
+          f"{stats.duration_balance:.2f})")
     for client in sorted(stats.by_tenant):
         ts = stats.by_tenant[client]
         print(f"[serve]   tenant {client}: {ts.launches} launches / "
@@ -146,12 +222,19 @@ def main(argv=None):
     ap.add_argument("--skewed", action="store_true",
                     help="one large-bucket tenant + small ones (the "
                          "workload bucketed drains exist for)")
+    ap.add_argument("--longtail", action="store_true",
+                    help="single-block binaries of skewed durations "
+                         "(the workload the balanced drain exists for)")
     ap.add_argument("--baseline", action="store_true",
                     help="also time sequential run_grid calls (cold)")
     args = ap.parse_args(argv)
 
+    if args.skewed and args.longtail:
+        ap.error("--skewed and --longtail are mutually exclusive")
     if args.skewed:
         work = build_skewed_workload(max(1, args.launches - 1), args.seed)
+    elif args.longtail:
+        work = build_longtail_workload(args.launches, args.seed)
     else:
         work = build_workload(args.launches, args.seed)
     t_seq = None

@@ -7,7 +7,10 @@ resident machine handles many tenants' binaries back-to-back:
 * :mod:`registry` — binary cache / module registry: bucketed program
   padding + content-addressed memoization, so a new tenant binary never
   retraces the machine; launch footprints (code/gmem/warp buckets) are
-  the keys the drain policies schedule on;
+  the keys the drain policies schedule on; the registry's
+  :class:`~repro.runtime.registry.CostModel` memoizes observed
+  cycles/block per module (seeded from program length) so policies can
+  pack windows by predicted *duration*;
 * :mod:`executor` — the multi-SM executor: blocks from one or more
   launches packed round-robin across ``n_sm`` SMs via a batched vmap
   axis, with per-SM cycle counters coming out of the executed schedule
@@ -18,36 +21,42 @@ resident machine handles many tenants' binaries back-to-back:
   that resolve exactly once when their drain sub-batch completes;
 * :mod:`policy`  — pluggable drain policies: monolithic super-steps,
   ``(gmem bucket, binary)``-keyed sub-batching (no cross-tenant memory
-  padding), fair round-robin window composition, admission control and
-  per-tenant / per-bucket accounting;
+  padding), fair round-robin window composition, cost-model-driven
+  duration packing (greedy LPT), admission control and per-tenant /
+  per-bucket accounting;
 * :mod:`server`  — the multi-tenant launch queue draining policy-cut
-  windows into SM-packed dispatch groups.
+  windows into SM-packed dispatch groups, topologically ordered over
+  per-stream dependency edges (a dependent launch drains after its
+  producer without flushing the server).
 
 ``repro.core.scheduler.run_grid`` is a thin compatibility wrapper over
 :func:`executor.run_grid`, so every pre-runtime benchmark and test
 exercises this path.
 """
-from .registry import (CODE_BUCKETS, GMEM_MIN_WORDS, WARP_BUCKETS,
-                       Footprint, Module, ModuleRegistry, bucket_code_len,
+from .registry import (CODE_BUCKETS, GMEM_MIN_WORDS, SEED_CYCLES_PER_INSTR,
+                       WARP_BUCKETS, CostEstimate, CostModel, Footprint,
+                       Module, ModuleRegistry, bucket_code_len,
                        bucket_gmem_len, bucket_warps, footprint, pad_code)
 from .executor import (BLOCK_SCHED_OVERHEAD, LAUNCH_BUCKETS, DeviceGrid,
                        GridResult, LaunchSpec, MultiSMReport,
                        bucket_launches, execute, run_grid)
 from .stream import (Event, Launch, QueuedLaunch, QueuedStream, Runtime,
                      Stream)
-from .policy import (POLICIES, AdmissionError, BucketDrain, BucketStats,
-                     DrainPolicy, FairBucketDrain, MonolithicDrain,
-                     TenantStats, make_policy)
-from .server import DrainStats, LaunchRequest, RuntimeServer
+from .policy import (POLICIES, AdmissionError, BalancedDrain, BucketDrain,
+                     BucketStats, DrainPolicy, FairBucketDrain,
+                     MonolithicDrain, TenantStats, make_policy)
+from .server import DepGmem, DrainStats, LaunchRequest, RuntimeServer
 
 __all__ = [
-    "AdmissionError", "BLOCK_SCHED_OVERHEAD", "BucketDrain", "BucketStats",
-    "CODE_BUCKETS", "DeviceGrid", "DrainPolicy", "DrainStats", "Event",
-    "FairBucketDrain", "Footprint", "GMEM_MIN_WORDS", "GridResult",
-    "Launch", "LaunchRequest", "LaunchSpec", "LAUNCH_BUCKETS",
-    "MonolithicDrain", "Module", "ModuleRegistry", "MultiSMReport",
-    "POLICIES", "QueuedLaunch", "QueuedStream", "Runtime", "RuntimeServer",
-    "Stream", "TenantStats", "WARP_BUCKETS", "bucket_code_len",
-    "bucket_gmem_len", "bucket_launches", "bucket_warps", "execute",
-    "footprint", "make_policy", "pad_code", "run_grid",
+    "AdmissionError", "BLOCK_SCHED_OVERHEAD", "BalancedDrain",
+    "BucketDrain", "BucketStats", "CODE_BUCKETS", "CostEstimate",
+    "CostModel", "DepGmem", "DeviceGrid", "DrainPolicy", "DrainStats",
+    "Event", "FairBucketDrain", "Footprint", "GMEM_MIN_WORDS",
+    "GridResult", "Launch", "LaunchRequest", "LaunchSpec",
+    "LAUNCH_BUCKETS", "MonolithicDrain", "Module", "ModuleRegistry",
+    "MultiSMReport", "POLICIES", "QueuedLaunch", "QueuedStream", "Runtime",
+    "RuntimeServer", "SEED_CYCLES_PER_INSTR", "Stream", "TenantStats",
+    "WARP_BUCKETS", "bucket_code_len", "bucket_gmem_len",
+    "bucket_launches", "bucket_warps", "execute", "footprint",
+    "make_policy", "pad_code", "run_grid",
 ]

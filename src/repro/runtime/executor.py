@@ -94,7 +94,18 @@ class MultiSMReport(NamedTuple):
 
     @property
     def kernel_cycles(self) -> int:
+        """Makespan of this dispatch group: the busiest SM's cycles.
+        Sub-batches of a drain run back-to-back, so a drain's makespan
+        is the sum of its groups' kernel_cycles — the duration the
+        cost-model policies (``BalancedDrain``) minimize."""
         return int(self.per_sm_cycles.max())
+
+    @property
+    def busy_cycles(self) -> int:
+        """Total SM-cycles of real work in this group (sum over SMs).
+        ``busy / (n_sm * kernel_cycles)`` is the drain-level
+        ``DrainStats.duration_balance``."""
+        return int(self.per_sm_cycles.sum())
 
     @property
     def padded_gmem_words(self) -> int:

@@ -18,6 +18,13 @@ This module makes that cut pluggable:
 * :class:`FairBucketDrain` — BucketDrain plus round-robin window
   composition across tenants, so one chatty tenant cannot monopolize
   the SM slots of a bounded window.
+* :class:`BalancedDrain` — cost-model-driven *duration* packing: groups
+  are keyed on the full launch footprint (binary-agnostic, so equal
+  footprints merge into one dispatch group at zero padding cost) and
+  blocks are ordered by descending predicted cycles/block — greedy LPT
+  bin-packing realized through the executor's position-major
+  round-robin, so one long sub-batch no longer serializes a drain
+  window behind short ones.
 
 All policies are functionally interchangeable: launches own disjoint
 memories, so every ticket's result is bit-exact with a sequential
@@ -65,6 +72,8 @@ class BucketStats:
     sm_slots: int = 0           # sm_steps * n_sm (block capacity)
     useful_gmem_words: int = 0
     padded_gmem_words: int = 0
+    makespan_cycles: int = 0    # sum of the groups' busiest-SM cycles
+    busy_cycles: int = 0        # sum of the groups' real-work SM-cycles
 
     @property
     def occupancy(self) -> float:
@@ -82,10 +91,28 @@ class SubBatch(NamedTuple):
 def request_footprint(request, registry: ModuleRegistry) -> reg.Footprint:
     """Bucketed footprint of one pending request — the axes dispatch
     groups are keyed on.  Specs enqueued by the server already carry
-    Modules, so this never re-hashes a binary."""
+    Modules, so this never re-hashes a binary.  (A dependent launch's
+    deferred gmem exposes the producer's length via ``.shape``, so
+    footprints work before the memory exists.)"""
     mod = registry.as_module(request.spec.code)
     return reg.footprint(mod, request.spec.block_dim,
                          int(request.spec.gmem.shape[0]))
+
+
+def request_block_cycles(request, registry: ModuleRegistry) -> float:
+    """Predicted cycles/block of one pending request, from the
+    registry's :class:`~repro.runtime.registry.CostModel` (observed mean
+    if the module has drained before, static program-length seed
+    otherwise)."""
+    return registry.cost_model.predicted_block_cycles(
+        registry.as_module(request.spec.code))
+
+
+def request_duration(request, registry: ModuleRegistry) -> float:
+    """Predicted total cycles of one pending request: blocks x
+    predicted cycles/block.  The duration BalancedDrain packs on."""
+    gx, gy = request.spec.grid
+    return gx * gy * request_block_cycles(request, registry)
 
 
 def _make_sub_batch(requests: Sequence,
@@ -184,9 +211,61 @@ class FairBucketDrain(BucketDrain):
         return out
 
 
+class BalancedDrain(DrainPolicy):
+    """Cost-model-driven duration packing: greedy LPT across SM steps.
+
+    BucketDrain balances *footprint* but not *duration*: its groups are
+    one binary each, so a window of eight different single-block
+    binaries drains as eight sequential sub-batches, each leaving every
+    SM but one idle — the long sub-batch serializes behind the short
+    ones.  This policy packs by predicted duration instead:
+
+    * groups are keyed on the **full launch footprint** ``(code bucket,
+      gmem bucket, warp bucket)`` rather than ``(gmem bucket, binary)``
+      — launches with equal footprints share every padded array shape
+      (see :class:`~repro.runtime.registry.Footprint`), so merging
+      different binaries into one dispatch group costs no padding and
+      keeps the memory-awareness of BucketDrain (a small tenant still
+      never pads to a large tenant's gmem bucket);
+    * within a group, requests are ordered by **descending predicted
+      cycles/block** from the registry's cost model (observed drain
+      means, program-length seeds for cold modules).  The executor
+      assigns schedule position ``p`` to SM ``p % n_sm``, so emitting
+      the longest remaining block at each position *is* the greedy
+      LPT heuristic realized through position order: long blocks spread
+      across SMs first and short ones level the remainder, instead of
+      one SM drawing the long block while the rest sit idle;
+    * groups themselves run longest-first (deterministic, and the big
+      groups' counters land early in the telemetry).
+
+    Predictions only reorder schedule positions — results stay bit-exact
+    with sequential ``run_grid`` whatever the model believes, enforced
+    by the differential fuzz suite alongside the other policies.
+    """
+
+    name = "balanced"
+
+    def partition(self, window, registry):
+        groups: Dict[reg.Footprint, List] = {}
+        for r in window:
+            groups.setdefault(request_footprint(r, registry), []).append(r)
+        subs = []
+        for g in groups.values():
+            # stable LPT order: longest predicted block first, window
+            # order among equals (sort is stable)
+            ordered = sorted(g, key=lambda r:
+                             -request_block_cycles(r, registry))
+            subs.append((sum(request_duration(r, registry)
+                             for r in ordered),
+                         _make_sub_batch(ordered, registry)))
+        subs.sort(key=lambda pair: -pair[0])
+        return [sb for _, sb in subs]
+
+
 #: CLI / constructor lookup: ``RuntimeServer(policy="bucket")``.
 POLICIES = {p.name: p for p in
-            (MonolithicDrain, BucketDrain, FairBucketDrain)}
+            (MonolithicDrain, BucketDrain, FairBucketDrain,
+             BalancedDrain)}
 
 
 def make_policy(policy: Union[str, DrainPolicy, None]) -> DrainPolicy:

@@ -20,6 +20,12 @@ binary never retraces the machine:
 The jitted machine itself is memoized by ``jax.jit`` keyed on
 ``(MachineConfig, n_warps)`` plus the *bucketed* array shapes — see
 :mod:`repro.runtime.executor`.
+
+The registry also owns the serving layer's :class:`CostModel`: each
+module memoizes the cycles/block its completed drains *observed*,
+seeded by a static estimate from program length, so drain policies can
+pack sub-batch windows by predicted **duration** (not just footprint)
+— see :class:`repro.runtime.policy.BalancedDrain`.
 """
 from __future__ import annotations
 
@@ -124,13 +130,104 @@ class Module(NamedTuple):
         return self.code.shape[0]
 
 
+#: Static cycles/block prior for a module no drain has observed yet:
+#: every *real* (pre-padding) instruction is charged this many cycles.
+#: It is a coarse prior — issue cost is really rows_per_warp plus
+#: memory latency per instruction, times warps per block — but the cost
+#: model only needs it to be monotone in program length so the LPT
+#: packing of :class:`~repro.runtime.policy.BalancedDrain` orders cold
+#: modules sensibly; the first completed drain replaces it with the
+#: executed mean.
+SEED_CYCLES_PER_INSTR = 32
+
+
+class CostEstimate(NamedTuple):
+    """One cost-model answer: predicted cycles/block and its provenance."""
+    cycles_per_block: float
+    observed: bool       # False while the estimate is the static seed
+    samples: int         # executed blocks folded into the mean so far
+
+
+class CostModel:
+    """Per-module predicted cycles/block, memoized from completed drains.
+
+    A module the server has never executed is estimated statically from
+    its program length (``n_instr * SEED_CYCLES_PER_INSTR``); every
+    completed drain then folds the *executed* per-block cycle counters
+    into a running mean keyed on the module's content hash, so the
+    prediction converges to the observed duration after one drain and
+    keeps tightening as more blocks complete.  Drain policies query
+    :meth:`predicted_block_cycles` to balance sub-batch durations
+    (greedy LPT packing); predictions never affect results — they only
+    reorder schedule positions, and every policy stays bit-exact with
+    sequential execution.
+
+    ``max_entries`` bounds the observation tables the same way the
+    registry bounds modules (LRU eviction beyond it): a module evicted
+    mid-drain can still be *observed* afterwards — its Module object
+    survives in the pending request — so eviction-time ``forget`` alone
+    would not keep a binary-churning server's tables bounded.
+    """
+
+    def __init__(self, max_entries: Optional[int] = None) -> None:
+        self.max_entries = max_entries
+        self._mean: Dict[str, float] = {}     # module key -> mean cyc/block
+        self._samples: Dict[str, int] = {}    # module key -> blocks observed
+
+    def seed_estimate(self, module: Module) -> float:
+        """Static prior from program length (pre-padding instructions)."""
+        return float(module.n_instr) * SEED_CYCLES_PER_INSTR
+
+    def predicted_block_cycles(self, module: Module) -> float:
+        """Best current cycles/block prediction: observed mean if any
+        drain completed blocks of this module, the static seed otherwise."""
+        if module.key in self._mean:
+            return self._mean[module.key]
+        return self.seed_estimate(module)
+
+    def estimate(self, module: Module) -> CostEstimate:
+        """Prediction plus provenance (observed vs seeded, sample count)."""
+        key = module.key
+        if key in self._mean:
+            return CostEstimate(self._mean[key], True, self._samples[key])
+        return CostEstimate(self.seed_estimate(module), False, 0)
+
+    def observe(self, module: Module, cycles_per_block) -> None:
+        """Fold executed per-block cycle counters into the running mean.
+
+        ``cycles_per_block`` is a scalar or array of cycle counts, one
+        per completed block — exactly ``GridResult.cycles_per_block``.
+        """
+        arr = np.asarray(cycles_per_block, np.float64).ravel()
+        if arr.size == 0:
+            return
+        key = module.key
+        n0 = self._samples.get(key, 0)
+        m0 = self._mean.pop(key, 0.0)         # re-insert at the back:
+        self._samples.pop(key, None)          # dict order is LRU order
+        n1 = n0 + int(arr.size)
+        self._mean[key] = (m0 * n0 + float(arr.sum())) / n1
+        self._samples[key] = n1
+        if self.max_entries and len(self._mean) > self.max_entries:
+            self.forget(next(iter(self._mean)))
+
+    def forget(self, key: str) -> None:
+        """Drop a module's observations (paired with registry eviction)."""
+        self._mean.pop(key, None)
+        self._samples.pop(key, None)
+
+
 class ModuleRegistry:
     """Content-addressed cache of loaded kernel binaries.
 
     ``load`` is idempotent: the same binary (bit-for-bit) returns the
     same :class:`Module` object, so downstream jit caches see one
     canonical padded array per distinct program.  ``hits``/``misses``
-    expose cache behaviour for tests and serving metrics.
+    expose cache behaviour for tests and serving metrics.  The registry
+    carries the serving layer's :class:`CostModel` (``cost_model``), so
+    every consumer of a module — policies, server, CLI — shares one set
+    of duration observations; evicting a module drops its observations
+    with it.
     """
 
     def __init__(self, max_modules: Optional[int] = None) -> None:
@@ -138,6 +235,7 @@ class ModuleRegistry:
         self.max_modules = max_modules
         self.hits = 0
         self.misses = 0
+        self.cost_model = CostModel(max_entries=max_modules)
 
     def __len__(self) -> int:
         return len(self._modules)
@@ -154,7 +252,8 @@ class ModuleRegistry:
             return mod
         self.misses += 1
         if self.max_modules and len(self._modules) >= self.max_modules:
-            self._modules.pop(next(iter(self._modules)))  # evict LRU
+            evicted = self._modules.pop(next(iter(self._modules)))  # LRU
+            self.cost_model.forget(evicted.key)
         mod = Module(name=name or f"module_{key[:8]}", code=pad_code(code),
                      n_instr=len(code), key=key)
         self._modules[key] = mod

@@ -30,6 +30,7 @@ for the next drain to redeem.
 """
 from __future__ import annotations
 
+import bisect
 import time
 from typing import Dict, List, NamedTuple, Optional, Tuple, Union
 
@@ -43,11 +44,34 @@ from .registry import ModuleRegistry
 from .stream import QueuedLaunch, QueuedStream
 
 
+class DepGmem(NamedTuple):
+    """Deferred global memory of a *dependent* launch: the final gmem of
+    ``ticket``, which does not exist until that producer's sub-batch
+    completes.  ``drain`` materializes it just before the dependent's
+    own sub-batch executes (topologically after the producer's), so a
+    chained :class:`~repro.runtime.stream.QueuedStream` launch enqueues
+    immediately instead of flushing the whole server.  ``shape`` mirrors
+    a 1-D array so footprint bucketing and accounting work before the
+    memory exists (a launch's output memory has its input's length)."""
+    ticket: int          # producer ticket whose final gmem this is
+    length: int          # the producer's gmem length (words)
+
+    @property
+    def shape(self):
+        return (self.length,)
+
+
 class LaunchRequest(NamedTuple):
     ticket: int
     client: str
     spec: ex.LaunchSpec
     attempts: int = 0     # failed drain attempts so far
+
+    @property
+    def deps(self):
+        """Producer tickets this request's memory depends on."""
+        g = self.spec.gmem
+        return (g.ticket,) if isinstance(g, DepGmem) else ()
 
 
 class DrainStats(NamedTuple):
@@ -65,6 +89,17 @@ class DrainStats(NamedTuple):
     occupancy: float = 0.0       # real blocks / (SM-step slots)
     by_tenant: Optional[Dict[str, TenantStats]] = None   # this drain only
     by_bucket: Optional[Dict[int, BucketStats]] = None
+    makespan_cycles: int = 0     # sum over sub-batches of busiest-SM cycles
+    busy_cycles: int = 0         # sum over sub-batches and SMs of real work
+
+    @property
+    def duration_balance(self) -> float:
+        """Fraction of drain SM-time spent on real blocks:
+        ``busy_cycles / (n_sm * makespan_cycles)`` — the duration
+        analogue of the slot-count ``occupancy``; what BalancedDrain
+        raises on skewed-duration windows."""
+        denom = self.n_sm * self.makespan_cycles
+        return self.busy_cycles / denom if denom else 0.0
 
 
 class RuntimeServer:
@@ -97,6 +132,14 @@ class RuntimeServer:
         # raised survive here until the next drain redeems them
         self._completed: Dict[int, ex.GridResult] = {}
         self._futures: Dict[int, QueuedLaunch] = {}
+        # dependency bookkeeping: how many still-queued dependents wait
+        # on each producer ticket, completed producer memories kept
+        # alive until the last dependent consumed them, and producers
+        # dropped while dependents were still waiting (those dependents
+        # must fail, not requeue forever)
+        self._dep_waiters: Dict[int, int] = {}
+        self._dep_gmem: Dict[int, np.ndarray] = {}
+        self._dep_dropped: set = set()
         self._next_ticket = 0
         self.drains = 0
         self.launches_served = 0
@@ -123,17 +166,34 @@ class RuntimeServer:
                     f"tenant {client!r} at its in-flight cap "
                     f"({self.max_inflight_per_tenant}); drain first")
 
+    def _gmem_or_dep(self, fut: QueuedLaunch):
+        """Coerce a :class:`QueuedLaunch` passed as launch memory: a
+        resolved (or foreign-server) future snapshots its concrete gmem;
+        a future still pending on THIS server becomes a :class:`DepGmem`
+        dependency edge instead — the drain orders the dependent's
+        sub-batch after the producer's, so nothing flushes now.  The
+        length is left 0 here: ``submit`` derives it from the producer's
+        pending spec (the single normalization site, shared with
+        caller-supplied DepGmems)."""
+        if fut._server is self and not fut.done():
+            return DepGmem(fut.ticket, 0)
+        return np.asarray(fut.gmem(), np.int32)
+
     def submit(self, code, grid, block_dim, gmem,
                client: str = "anon") -> int:
         """Enqueue one launch; returns a ticket redeemable at ``drain``.
 
         Host arrays are snapshotted — a tenant may reuse its buffer
         immediately after submitting (device arrays are immutable and
-        pass through as-is).  Geometry is validated here so a malformed
-        request is rejected at the door instead of poisoning a later
-        ``drain`` window shared with other tenants; admission control
-        (bounded queue, per-tenant cap) rejects with
-        :class:`AdmissionError`.
+        pass through as-is).  ``gmem`` may also be a
+        :class:`~repro.runtime.stream.QueuedLaunch` of this server: a
+        still-pending producer registers a dependency edge
+        (:class:`DepGmem`) and the drain topologically orders the two
+        sub-batches — the dependent enqueues without flushing anything.
+        Geometry is validated here so a malformed request is rejected at
+        the door instead of poisoning a later ``drain`` window shared
+        with other tenants; admission control (bounded queue, per-tenant
+        cap) rejects with :class:`AdmissionError`.
         """
         gx, gy = grid
         if gx < 1 or gy < 1:
@@ -146,16 +206,35 @@ class RuntimeServer:
                 f"per-drain block budget of {self.block_budget()} "
                 f"({self.n_sm} SMs x the executor's 2**15 blocks/SM "
                 "cycle-accumulator bound)")
-        if isinstance(gmem, np.ndarray) or not hasattr(gmem, "ndim"):
-            gmem = np.array(gmem, np.int32)   # snapshot (lists included)
-        if gmem.ndim != 1:
-            raise ValueError(f"gmem must be 1-D, got shape {gmem.shape}")
+        if isinstance(gmem, QueuedLaunch):
+            gmem = self._gmem_or_dep(gmem)
+        if isinstance(gmem, DepGmem):
+            prod = next((r for r in self._pending
+                         if r.ticket == gmem.ticket), None)
+            if prod is None:
+                raise ValueError(
+                    f"dependent launch references producer ticket "
+                    f"{gmem.ticket}, which is not pending on this server")
+            # never trust a caller-supplied length: the dependent's gmem
+            # bucket must match the memory that will be materialized, or
+            # window-mates merged on its footprint would silently pad to
+            # the producer's real width
+            gmem = DepGmem(gmem.ticket, int(prod.spec.gmem.shape[0]))
+        else:
+            if isinstance(gmem, np.ndarray) or not hasattr(gmem, "ndim"):
+                gmem = np.array(gmem, np.int32)  # snapshot (lists too)
+            if gmem.ndim != 1:
+                raise ValueError(
+                    f"gmem must be 1-D, got shape {gmem.shape}")
         self._admit(client)
         mod = self.registry.as_module(code)
         ticket = self._next_ticket
         self._next_ticket += 1
         self._pending.append(LaunchRequest(
             ticket, client, ex.LaunchSpec(mod, grid, block_dim, gmem)))
+        if isinstance(gmem, DepGmem):
+            self._dep_waiters[gmem.ticket] = \
+                self._dep_waiters.get(gmem.ticket, 0) + 1
         return ticket
 
     def submit_future(self, code, grid, block_dim, gmem,
@@ -204,13 +283,143 @@ class RuntimeServer:
     def _cut(self, window: List[LaunchRequest]) -> List[pol.SubBatch]:
         """Policy partition, with retried requests isolated first: a
         launch that already failed once drains in a singleton sub-batch,
-        so whatever poisoned it cannot take fresh window-mates down."""
+        so whatever poisoned it cannot take fresh window-mates down.
+        Sub-batches holding an internal producer->dependent edge are
+        split so the drain's topological ordering can respect it."""
         fresh = [r for r in window if r.attempts == 0]
         retried = [r for r in window if r.attempts > 0]
         cuts = [pol._make_sub_batch([r], self.registry) for r in retried]
         if fresh:
             cuts.extend(self.policy.partition(fresh, self.registry))
-        return cuts
+        return self._split_dep_layers(window, cuts)
+
+    def _split_dep_layers(self, window: List[LaunchRequest],
+                          cuts: List[pol.SubBatch]) -> List[pol.SubBatch]:
+        """Subdivide each policy group by dependency *depth* within this
+        window, so the inter-group graph is acyclic and one drain always
+        completes a whole chain.  Splitting only direct in-group edges
+        would not be enough: a policy may merge an ancestor and a
+        descendant of a *third* group (a -> b -> c with b in another
+        footprint), leaving a cycle between the two groups that
+        ``_topo_order`` could only punt on.  Depth layering kills every
+        such cycle — an edge always crosses into a strictly deeper
+        layer, whatever the policy merged."""
+        if not any(r.deps for r in window):
+            return cuts
+        # deps always reference older (smaller) tickets, so ascending
+        # ticket order computes depths in one pass; deps outside this
+        # window (already completed, stashed) contribute no depth
+        depth: Dict[int, int] = {}
+        for r in sorted(window, key=lambda q: q.ticket):
+            ds = [depth[t] for t in r.deps if t in depth]
+            depth[r.ticket] = (1 + max(ds)) if ds else 0
+        out = []
+        for sb in cuts:
+            levels = sorted({depth[r.ticket] for r in sb.requests})
+            if len(levels) == 1:
+                out.append(sb)
+                continue
+            for lv in levels:
+                layer = [r for r in sb.requests
+                         if depth[r.ticket] == lv]
+                out.append(pol._make_sub_batch(layer, self.registry))
+        return out
+
+    def _topo_order(self, cuts: List[pol.SubBatch]
+                    ) -> List[pol.SubBatch]:
+        """Topologically order a window's sub-batches so every producer
+        executes before its dependents, keeping the policy's order among
+        unconstrained groups.  Dependency tickets always point at older
+        submissions, so the public API cannot create a cycle; if one
+        appears anyway the policy order is kept — unready dependents
+        then requeue instead of deadlocking the drain."""
+        owner = {r.ticket: i for i, sb in enumerate(cuts)
+                 for r in sb.requests}
+        n = len(cuts)
+        dependents = [set() for _ in range(n)]
+        indeg = [0] * n
+        for j, sb in enumerate(cuts):
+            for r in sb.requests:
+                for d in r.deps:
+                    i = owner.get(d)
+                    if i is not None and i != j and j not in dependents[i]:
+                        dependents[i].add(j)
+                        indeg[j] += 1
+        if not any(indeg):
+            return cuts
+        ready = sorted(i for i in range(n) if indeg[i] == 0)
+        order: List[int] = []
+        while ready:
+            i = ready.pop(0)
+            order.append(i)
+            for j in sorted(dependents[i]):
+                indeg[j] -= 1
+                if indeg[j] == 0:
+                    bisect.insort(ready, j)   # stable: policy order
+        if len(order) != n:                   # cycle: fall back
+            return cuts
+        return [cuts[i] for i in order]
+
+    def _dep_lookup(self, ticket: int,
+                    results: Dict[int, ex.GridResult]):
+        """A completed producer's final gmem, from this drain's results
+        or the cross-drain stash; None while the producer hasn't run."""
+        if ticket in results:
+            return np.asarray(results[ticket].gmem, np.int32)
+        return self._dep_gmem.get(ticket)
+
+    def _dep_done(self, ticket: int) -> None:
+        """One dependent of ``ticket`` finished (or was dropped): free
+        the stashed producer memory once nobody else waits on it."""
+        n = self._dep_waiters.get(ticket, 0) - 1
+        if n > 0:
+            self._dep_waiters[ticket] = n
+        else:
+            self._dep_waiters.pop(ticket, None)
+            self._dep_gmem.pop(ticket, None)
+            self._dep_dropped.discard(ticket)
+
+    def _drop(self, r: LaunchRequest, error: BaseException,
+              queue: List[LaunchRequest],
+              requeue: List[LaunchRequest]) -> None:
+        """Drop one request permanently: account it, fail its future,
+        and cascade to queued dependents whose memory can now never
+        materialize.  Iterative worklist over an index of queued
+        dependents — a recursive cascade would blow the interpreter
+        stack on a max_pending-length chain (escaping drain() with the
+        whole queue unwritten), and per-level rescans with nested error
+        strings would cost O(chain^2)."""
+        by_dep: Dict[int, List[LaunchRequest]] = {}
+        for lst in (queue, requeue):
+            for q in lst:
+                for d in q.deps:
+                    by_dep.setdefault(d, []).append(q)
+        cascade_err = RuntimeError(
+            f"producer ticket {r.ticket} was dropped: {error}")
+        doomed = set()
+        work, err = [r], error            # root keeps the real error
+        while work:
+            req = work.pop()
+            ts = self.tenant_stats.setdefault(req.client, TenantStats())
+            ts.dropped += 1
+            fut = self._futures.pop(req.ticket, None)
+            if fut is not None:
+                fut._fail(err)
+            err = cascade_err             # everything after the root
+            if req.ticket in self._dep_waiters:
+                # dependents elsewhere in the current window see the
+                # drop at materialization time (they are in neither
+                # list yet)
+                self._dep_dropped.add(req.ticket)
+            for d in req.deps:
+                self._dep_done(d)
+            for q in by_dep.get(req.ticket, ()):
+                if q.ticket not in doomed:
+                    doomed.add(q.ticket)
+                    work.append(q)
+        if doomed:
+            queue[:] = [q for q in queue if q.ticket not in doomed]
+            requeue[:] = [q for q in requeue if q.ticket not in doomed]
 
     def _account(self, sb: pol.SubBatch, rep: ex.MultiSMReport,
                  by_tenant: Dict[str, TenantStats],
@@ -228,6 +437,8 @@ class RuntimeServer:
             bs.sm_slots += rep.n_steps * rep.n_sm
             bs.useful_gmem_words += rep.useful_gmem_words
             bs.padded_gmem_words += rep.padded_gmem_words
+            bs.makespan_cycles += rep.kernel_cycles
+            bs.busy_cycles += rep.busy_cycles
         for r in sb.requests:
             useful = int(r.spec.gmem.shape[0])
             padded = sb.gmem_bucket - useful
@@ -246,18 +457,27 @@ class RuntimeServer:
 
         Packs up to ``max_batch`` launches per window (``max_windows``
         bounds how many windows this call processes; default all), cuts
-        each window into dispatch groups via the drain policy, and runs
-        each group through :func:`repro.runtime.executor.execute` with
-        the group's own gmem bucket and SM width.  Returns ``{ticket:
+        each window into dispatch groups via the drain policy —
+        **topologically ordered** so a producer's group always executes
+        before its dependents' — and runs each group through
+        :func:`repro.runtime.executor.execute` with the group's own gmem
+        bucket and SM width.  A dependent launch's deferred memory
+        (:class:`DepGmem`) is materialized from the producer's completed
+        result just before its group executes.  Returns ``{ticket:
         GridResult}`` plus statistics; per-SM counters are summed over
         groups (the SMs run them back-to-back).  Tickets redeemed from a
         previously-failed drain appear in the results but not in this
-        drain's execution statistics.
+        drain's execution statistics.  Completed per-block cycle
+        counters feed the registry's cost model, so duration predictions
+        tighten with every drain.
 
         On a sub-batch failure the remaining sub-batches still execute;
         the failing group's requests requeue (bumped retry count, tail
         of the queue) and the first exception re-raises at the end with
-        every completed result stashed for the next drain.
+        every completed result stashed for the next drain.  A dependent
+        whose producer has not completed (requeued, or beyond the window
+        bound) requeues without a retry bump; once a producer is
+        *dropped*, its dependents fail with it.
         """
         if not self._pending and not self._completed:
             return {}, DrainStats(0, 0, self.n_sm, 0.0, 0.0,
@@ -270,6 +490,7 @@ class RuntimeServer:
         n_blocks = n_steps = n_launches = 0
         n_windows = n_sub_batches = 0
         useful_words = padded_words = sm_slots = 0
+        makespan = busy = 0
         by_tenant: Dict[str, TenantStats] = {}
         by_bucket: Dict[int, BucketStats] = {}
         queue = self.policy.arrange(self._pending)
@@ -279,9 +500,34 @@ class RuntimeServer:
         while queue and (max_windows is None or n_windows < max_windows):
             window = self._pack_window(queue)
             n_windows += 1
-            for sb in self._cut(window):
+            for sb in self._topo_order(self._cut(window)):
+                # materialize dependent launches' memories from their
+                # producers' completed results; a dependent whose
+                # producer has not completed yet (requeued after a
+                # failure, or queued beyond this drain's window bound)
+                # requeues WITHOUT a retry bump — it never executed
+                ready, specs = [], []
+                for r in sb.requests:
+                    g = r.spec.gmem
+                    if isinstance(g, DepGmem):
+                        src = self._dep_lookup(g.ticket, results)
+                        if src is None:
+                            if g.ticket in self._dep_dropped:
+                                self._drop(r, RuntimeError(
+                                    f"producer ticket {g.ticket} was "
+                                    "dropped"), queue, requeue)
+                            else:
+                                requeue.append(r)
+                            continue
+                        specs.append(r.spec._replace(gmem=src))
+                    else:
+                        specs.append(r.spec)
+                    ready.append(r)
+                if not ready:
+                    continue
+                sb = sb._replace(requests=tuple(ready))
                 try:
-                    dg = ex.execute([r.spec for r in sb.requests],
+                    dg = ex.execute(specs,
                                     n_sm=self.n_sm, cfg=self.cfg,
                                     chunk=self.chunk,
                                     pad_warps=sb.pad_warps,
@@ -294,6 +540,7 @@ class RuntimeServer:
                     # count (drained next time in singleton sub-batches),
                     # and a request that keeps failing is dropped after
                     # MAX_ATTEMPTS — its future fails with the exception
+                    # and its dependents are dropped with it
                     if first_error is None:
                         first_error = e
                     for r in sb.requests:
@@ -301,17 +548,21 @@ class RuntimeServer:
                             requeue.append(
                                 r._replace(attempts=r.attempts + 1))
                         else:
-                            ts = self.tenant_stats.setdefault(
-                                r.client, TenantStats())
-                            ts.dropped += 1
-                            fut = self._futures.pop(r.ticket, None)
-                            if fut is not None:
-                                fut._fail(e)
+                            self._drop(r, e, queue, requeue)
                     continue
                 # resolve futures the moment their sub-batch completes —
-                # exactly once, independent of window completion order
+                # exactly once, independent of window completion order.
+                # Completed producers stash their memory for queued
+                # dependents; completed blocks feed the cost model.
                 for req, res in zip(sb.requests, sub_results):
                     results[req.ticket] = res
+                    self.registry.cost_model.observe(
+                        req.spec.code, res.cycles_per_block)
+                    if req.ticket in self._dep_waiters:
+                        self._dep_gmem[req.ticket] = \
+                            np.asarray(res.gmem, np.int32)
+                    for d in req.deps:
+                        self._dep_done(d)
                     fut = self._futures.pop(req.ticket, None)
                     if fut is not None:
                         fut._resolve(res)
@@ -324,6 +575,8 @@ class RuntimeServer:
                 useful_words += rep.useful_gmem_words
                 padded_words += rep.padded_gmem_words
                 sm_slots += rep.n_steps * rep.n_sm
+                makespan += rep.kernel_cycles
+                busy += rep.busy_cycles
                 self._account(sb, rep, by_tenant, by_bucket)
         # anything not drained this call (window bound or failures) goes
         # back on the queue: unprocessed arrivals first, retries at tail
@@ -340,5 +593,6 @@ class RuntimeServer:
             n_windows=n_windows, n_sub_batches=n_sub_batches,
             useful_gmem_words=useful_words, padded_gmem_words=padded_words,
             occupancy=n_blocks / sm_slots if sm_slots else 0.0,
-            by_tenant=by_tenant, by_bucket=by_bucket)
+            by_tenant=by_tenant, by_bucket=by_bucket,
+            makespan_cycles=makespan, busy_cycles=busy)
         return results, stats

@@ -253,13 +253,16 @@ class QueuedStream:
     The server-side sibling of :class:`Stream`: launches enqueue instead
     of dispatching eagerly, and the drain policy may land a stream's
     launches in *different sub-batches* (different gmem buckets).
-    Dataflow order survives that: a launch chaining on the stream memory
-    resolves its predecessor first (flushing the server), so the
-    consumer always reads the producer's completed output, whatever
-    sub-batch either fell into.  ``record_event`` snapshots the tail —
-    before resolution if the tail is still queued, so cross-stream
-    consumers observe the event firing only after the producer's
-    sub-batch completes.
+    Dataflow order survives that: a launch chaining on a still-queued
+    predecessor enqueues with a **dependency edge** on it, and the drain
+    topologically orders the two sub-batches — producer first, its
+    output materialized as the dependent's input just before the
+    dependent's group executes.  Nothing flushes at enqueue time: the
+    whole chain (plus any other tenants' pending launches) drains in
+    one ``drain`` call, in dependency order.  ``record_event`` snapshots
+    the tail — before resolution if the tail is still queued, so
+    cross-stream consumers observe the event firing only after the
+    producer's sub-batch completes.
     """
 
     def __init__(self, server, gmem=None, client: str = "stream"):
@@ -278,19 +281,25 @@ class QueuedStream:
     def launch(self, module, grid, block_dim, gmem=None) -> QueuedLaunch:
         """Enqueue one kernel on the server; returns a queued future.
 
-        ``gmem=None`` chains on the stream memory (resolving the queued
-        predecessor first — in-stream dataflow order); an explicit
-        array / future / :class:`Event` reads that memory instead.
+        ``gmem=None`` chains on the stream memory: a still-queued
+        predecessor becomes a dependency edge (the server's drain runs
+        the producer's sub-batch first and feeds its output in — no
+        flush), a resolved one passes its concrete memory.  An explicit
+        array / future / :class:`Event` reads that memory instead; a
+        still-queued :class:`QueuedLaunch` of the same server is also
+        taken as a dependency edge.
         """
         if gmem is None:
             if self._tail is not None:
-                g = np.asarray(self._tail.gmem())
+                g = self._tail          # dependency edge or concrete
             elif self._gmem is not None:
                 g = self._gmem
             else:
                 raise ValueError("stream has no memory: pass gmem= first")
-        elif isinstance(gmem, (Launch, QueuedLaunch, Event)):
+        elif isinstance(gmem, (Launch, Event)):
             g = np.asarray(gmem.gmem())
+        elif isinstance(gmem, QueuedLaunch):
+            g = gmem                    # server decides: edge or concrete
         else:
             g = np.asarray(gmem, np.int32)
         fut = self._srv.submit_future(module, grid, block_dim, g,

@@ -1,0 +1,397 @@
+"""Cost-model scheduling layer: seeding, memoization, LPT packing,
+dependency-aware topological drains.
+
+The tentpole invariants of the cost-model PR:
+
+* a module the server never executed is estimated statically from its
+  program length; one completed drain replaces the seed with the
+  executed mean cycles/block, and further drains tighten it (running
+  mean over all observed blocks);
+* ``BalancedDrain`` merges equal-footprint binaries into one
+  duration-ordered dispatch group (greedy LPT over the executor's
+  round-robin positions) and cuts the drain makespan of a
+  skewed-duration window by >= 1.5x vs ``BucketDrain`` — while staying
+  bit-exact with sequential ``run_grid`` (the ISSUE acceptance);
+* a dependent ``QueuedStream`` launch enqueues a dependency edge
+  instead of flushing the server: the whole chain drains inside ONE
+  topologically-ordered drain (pinned by counting drained windows), the
+  producer's memory survives partial drains for later windows, and a
+  dropped producer fails its dependents instead of leaking them.
+"""
+import numpy as np
+import pytest
+
+from repro import runtime as rt
+from repro.core import scheduler
+from repro.runtime import policy as pol
+from repro.runtime.server import DepGmem
+
+
+def _addk(k, in_at=0, out_at=64):
+    """Straightline kernel ``out[tid] = in[tid] + k`` (k IADD rows),
+    reusing the serving CLI's AddK builder: duration proportional to k;
+    all k <= 60 share the 64-instr code bucket (one footprint)."""
+    from repro.launch.gpgpu_serve import AddK
+    return AddK(k, in_at, out_at).build()
+
+
+LAUNCH = ((1, 1), (32, 1))
+
+
+def _gmem(words=128, seed=0):
+    g = np.zeros(words, np.int32)
+    g[:32] = np.random.default_rng(seed).integers(0, 1 << 16, 32)
+    return g
+
+
+# ------------------------------------------------------ seeding/memoization
+
+def test_seed_estimate_from_program_length():
+    regy = rt.ModuleRegistry()
+    mod = regy.load(_addk(5))
+    est = regy.cost_model.estimate(mod)
+    assert not est.observed and est.samples == 0
+    assert est.cycles_per_block == mod.n_instr * rt.SEED_CYCLES_PER_INSTR
+    assert regy.cost_model.predicted_block_cycles(mod) == \
+        est.cycles_per_block
+
+
+def test_cost_model_converges_to_observed_after_drain():
+    """ISSUE acceptance: cycles/block estimates converge to observed
+    values after a drain (exactly — the machine is deterministic)."""
+    srv = rt.RuntimeServer(n_sm=1)
+    mod = srv.registry.load(_addk(7))
+    t = srv.submit(mod.code[:mod.n_instr], *LAUNCH, _gmem())
+    results, _ = srv.drain()
+    observed = float(np.mean(results[t].cycles_per_block))
+    est = srv.registry.cost_model.estimate(mod)
+    assert est.observed and est.samples == 1
+    assert est.cycles_per_block == observed
+    # seed was replaced, not averaged in
+    assert est.cycles_per_block != mod.n_instr * rt.SEED_CYCLES_PER_INSTR
+    # further drains accumulate samples; the mean of identical runs
+    # stays put
+    for _ in range(2):
+        srv.submit(mod.code[:mod.n_instr], *LAUNCH, _gmem())
+    srv.drain()
+    est2 = srv.registry.cost_model.estimate(mod)
+    assert est2.samples == 3
+    assert est2.cycles_per_block == observed
+
+
+def test_cost_model_forgets_evicted_modules():
+    regy = rt.ModuleRegistry(max_modules=1)
+    mod_a = regy.load(_addk(3))
+    regy.cost_model.observe(mod_a, [123.0])
+    assert regy.cost_model.estimate(mod_a).observed
+    regy.load(_addk(4))                      # evicts mod_a (LRU of 1)
+    est = regy.cost_model.estimate(mod_a)
+    assert not est.observed
+    assert est.cycles_per_block == mod_a.n_instr * rt.SEED_CYCLES_PER_INSTR
+
+
+def test_cost_model_observation_tables_stay_bounded():
+    """Observing an already-evicted module (its Module survives in a
+    pending request) cannot grow the tables past the registry bound."""
+    regy = rt.ModuleRegistry(max_modules=2)
+    mods = [regy.load(_addk(k)) for k in (1, 2, 3, 4, 5)]
+    for m in mods:                           # incl. the 3 evicted ones
+        regy.cost_model.observe(m, [float(10 * m.n_instr)])
+    assert len(regy.cost_model._mean) <= 2
+    assert len(regy.cost_model._samples) <= 2
+    # the freshest observations survived (LRU order)
+    assert regy.cost_model.estimate(mods[-1]).observed
+
+
+# ------------------------------------------------------------- LPT packing
+
+def test_balanced_partition_merges_footprints_in_lpt_order():
+    """Equal-footprint binaries land in ONE dispatch group, ordered by
+    descending predicted cycles/block (program-length seeds here);
+    BucketDrain cuts the same window per binary."""
+    srv = rt.RuntimeServer(n_sm=2, policy="balanced")
+    ticket_of = {}
+    for k in (10, 60, 30):
+        t = srv.submit(_addk(k), *LAUNCH, _gmem(), client=f"t{k}")
+        ticket_of[k] = t
+    window = list(srv._pending)
+    cuts = srv.policy.partition(window, srv.registry)
+    assert len(cuts) == 1
+    assert [r.ticket for r in cuts[0].requests] == \
+        [ticket_of[60], ticket_of[30], ticket_of[10]]
+    assert len(pol.BucketDrain().partition(window, srv.registry)) == 3
+    srv._pending.clear()
+
+
+def test_balanced_keeps_gmem_buckets_apart():
+    """Duration packing never reintroduces cross-bucket padding: the
+    same binary at different gmem buckets stays in separate groups."""
+    srv = rt.RuntimeServer(n_sm=2, policy="balanced")
+    code = _addk(5)
+    srv.submit(code, *LAUNCH, _gmem(128), client="small")
+    srv.submit(code, *LAUNCH, _gmem(8192), client="big")
+    cuts = srv.policy.partition(list(srv._pending), srv.registry)
+    assert sorted(sb.gmem_bucket for sb in cuts) == [128, 8192]
+    srv._pending.clear()
+
+
+def test_balanced_uses_observed_costs_over_seeds():
+    """After a drain, LPT ordering follows observed durations even when
+    they invert the static seeds: a short program made 'expensive' by
+    observation packs first."""
+    srv = rt.RuntimeServer(n_sm=2, policy="balanced")
+    mod_short = srv.registry.load(_addk(5))
+    mod_long = srv.registry.load(_addk(50))
+    # fake observations inverting the seed order
+    srv.registry.cost_model.observe(mod_short, [9000.0])
+    srv.registry.cost_model.observe(mod_long, [10.0])
+    t_short = srv.submit(mod_short.code[:mod_short.n_instr], *LAUNCH,
+                         _gmem())
+    t_long = srv.submit(mod_long.code[:mod_long.n_instr], *LAUNCH,
+                        _gmem())
+    cuts = srv.policy.partition(list(srv._pending), srv.registry)
+    assert [r.ticket for r in cuts[0].requests] == [t_short, t_long]
+    srv._pending.clear()
+
+
+def test_longtail_balanced_makespan_acceptance():
+    """ISSUE acceptance: on the skewed-duration workload BalancedDrain's
+    drain makespan (SM-step duration) is >= 1.5x better than
+    BucketDrain's, with every ticket bit-exact vs sequential run_grid."""
+    from repro.launch.gpgpu_serve import build_longtail_workload
+    work = build_longtail_workload(8)
+    makespan = {}
+    for polname in ("bucket", "balanced"):
+        srv = rt.RuntimeServer(n_sm=2, policy=polname)
+        want = {}
+        for i, (name, mod, n, code, (grid, bd), g0) in enumerate(work):
+            t = srv.submit(code, grid, bd, g0.copy(), client=f"t{i}")
+            want[t] = scheduler.run_grid(code, grid, bd, g0.copy())
+        results, stats = srv.drain()
+        assert stats.n_windows == 1        # same window composition
+        for t, seq in want.items():
+            np.testing.assert_array_equal(results[t].gmem, seq.gmem)
+            np.testing.assert_array_equal(results[t].cycles_per_block,
+                                          seq.cycles_per_block)
+        makespan[polname] = stats.makespan_cycles
+        assert stats.busy_cycles <= stats.makespan_cycles * stats.n_sm
+    assert makespan["bucket"] >= 1.5 * makespan["balanced"]
+
+
+def test_balanced_merge_reports_higher_duration_balance():
+    """The duration telemetry orders the policies the right way round:
+    balanced's merged group keeps both SMs busier than bucket's
+    singleton parade."""
+    from repro.launch.gpgpu_serve import build_longtail_workload
+    work = build_longtail_workload(8)
+    balance = {}
+    for polname in ("bucket", "balanced"):
+        srv = rt.RuntimeServer(n_sm=2, policy=polname)
+        for i, (name, mod, n, code, (grid, bd), g0) in enumerate(work):
+            srv.submit(code, grid, bd, g0.copy(), client=f"t{i}")
+        _, stats = srv.drain()
+        balance[polname] = stats.duration_balance
+        # per-bucket duration telemetry ties out with the drain totals
+        assert sum(bs.makespan_cycles for bs in stats.by_bucket.values()) \
+            == stats.makespan_cycles
+        assert sum(bs.busy_cycles for bs in stats.by_bucket.values()) \
+            == stats.busy_cycles
+    assert balance["balanced"] > balance["bucket"]
+
+
+# --------------------------------------------- dependency-aware drains
+
+def test_dependent_stream_launch_drains_in_one_window():
+    """ISSUE acceptance: a dependent QueuedStream launch drains without
+    a full server flush — the chain plus an unrelated tenant complete in
+    ONE drain call, ONE window, topologically ordered."""
+    srv = rt.RuntimeServer(n_sm=2, policy="bucket")
+    m1 = srv.registry.load(_addk(1, in_at=0, out_at=64), "add1")
+    m2 = srv.registry.load(_addk(2, in_at=64, out_at=96), "add2")
+    other = srv.submit(_addk(9), *LAUNCH, _gmem(), client="other")
+    g0 = np.zeros(128, np.int32)
+    g0[:32] = np.arange(32)
+    s = srv.stream(g0, client="chain")
+    a = s.launch(m1, *LAUNCH)
+    b = s.launch(m2, *LAUNCH)          # dependency edge, NOT a flush
+    assert srv.pending() == 3 and srv.drains == 0
+    assert not a.done() and not b.done()
+    results, stats = srv.drain()
+    assert stats.n_windows == 1        # one window drained everything
+    assert srv.drains == 1
+    assert sorted(results) == sorted([other, a.ticket, b.ticket])
+    np.testing.assert_array_equal(
+        np.asarray(b.gmem())[96:128], np.arange(32) + 3)
+    # bookkeeping fully unwound
+    assert srv._dep_waiters == {} and srv._dep_gmem == {}
+
+
+def test_dependent_chain_of_three_same_footprint():
+    """a -> b -> c in one footprint group: the intra-group splitter
+    peels dependency layers so one drain runs all three in order."""
+    srv = rt.RuntimeServer(n_sm=1, policy="balanced")
+    g0 = np.zeros(128, np.int32)
+    g0[:32] = np.arange(32)
+    s = srv.stream(g0, client="chain")
+    mods = [srv.registry.load(_addk(k, in_at=0, out_at=0), f"k{k}")
+            for k in (3, 5, 7)]
+    futs = [s.launch(m, *LAUNCH) for m in mods]
+    assert srv.pending() == 3
+    results, stats = srv.drain()
+    assert srv.drains == 1 and stats.n_windows == 1
+    assert stats.n_sub_batches == 3    # one layer per chain link
+    np.testing.assert_array_equal(
+        np.asarray(futs[-1].gmem())[:32], np.arange(32) + 15)
+
+
+def test_dependency_survives_partial_drains():
+    """Producer drained in an earlier bounded drain: its memory is
+    stashed for the dependent's later window and freed afterwards."""
+    srv = rt.RuntimeServer(n_sm=1, policy="bucket", max_batch=1)
+    g0 = np.zeros(128, np.int32)
+    g0[:32] = np.arange(32)
+    s = srv.stream(g0, client="chain")
+    a = s.launch(srv.registry.load(_addk(1, out_at=0), "p"), *LAUNCH)
+    b = s.launch(srv.registry.load(_addk(2, out_at=0), "q"), *LAUNCH)
+    srv.drain(max_windows=1)           # producer's window only
+    assert a.done() and not b.done()
+    assert srv._dep_gmem                # stashed across drains
+    srv.drain()
+    np.testing.assert_array_equal(
+        np.asarray(b.gmem())[:32], np.arange(32) + 3)
+    assert srv._dep_waiters == {} and srv._dep_gmem == {}
+
+
+def test_transitive_chain_across_footprints_one_drain():
+    """a -> b -> c where the policy merges a and c (equal footprints)
+    but b sits in another group: depth layering must break the
+    inter-group cycle so ONE drain still completes the whole chain."""
+    from repro.launch.gpgpu_serve import AddK
+    srv = rt.RuntimeServer(n_sm=2, policy="balanced")
+    g0 = np.zeros(128, np.int32)
+    g0[:32] = np.arange(32)
+    s = srv.stream(g0, client="chain")
+    a = s.launch(AddK(3, 0, 0).build(), (1, 1), (32, 1))
+    b = s.launch(AddK(5, 0, 0).build(), (1, 1), (64, 1))  # warp bucket 2
+    c = s.launch(AddK(7, 0, 0).build(), (1, 1), (32, 1))  # groups with a
+    results, stats = srv.drain()
+    assert sorted(results) == [a.ticket, b.ticket, c.ticket]
+    assert srv.drains == 1 and srv.pending() == 0
+    np.testing.assert_array_equal(
+        np.asarray(c.gmem())[:32], np.arange(32) + 15)
+
+
+def test_long_chain_drop_cascade_is_iterative():
+    """Dropping the head of a deep chain must not blow the recursion
+    limit: every dependent fails, nothing leaks, unrelated tenants
+    survive."""
+    import sys
+    n = min(1200, sys.getrecursionlimit() + 200)
+    srv = rt.RuntimeServer(n_sm=1, policy="bucket", max_pending=n + 8,
+                           max_inflight_per_tenant=None)
+    g0 = np.zeros(128, np.int32)
+    s = srv.stream(g0, client="deep")
+    code = _addk(1, out_at=0)
+    futs = [s.launch(code, *LAUNCH) for _ in range(n)]
+    bystander = srv.submit_future(_addk(2), *LAUNCH, _gmem(),
+                                  client="other")
+    # poison the chain head behind the validator's back
+    srv._pending[0] = srv._pending[0]._replace(
+        spec=srv._pending[0].spec._replace(
+            gmem=srv._pending[0].spec.gmem.reshape(2, -1)))
+    for _ in range(srv.MAX_ATTEMPTS):
+        with pytest.raises(Exception):
+            srv.drain()
+    assert srv.pending() == 0
+    assert all(f.done() for f in futs)
+    with pytest.raises(RuntimeError, match="dropped"):
+        futs[-1].result()
+    assert bystander.done()               # unrelated tenant completed
+    assert bystander.result() is not None
+    assert srv.tenant_stats["deep"].dropped == n
+    assert srv._dep_waiters == {} and srv._dep_gmem == {}
+
+
+def test_dependent_topological_order_beats_lpt_order():
+    """BalancedDrain would pack the expensive dependent first; the
+    topological ordering still runs the producer first and the chain
+    stays exact."""
+    srv = rt.RuntimeServer(n_sm=2, policy="balanced")
+    g0 = np.zeros(192, np.int32)
+    g0[:32] = np.arange(32)
+    s = srv.stream(g0, client="chain")
+    a = s.launch(srv.registry.load(_addk(2, 0, 64), "cheap"), *LAUNCH)
+    b = s.launch(srv.registry.load(_addk(60, 64, 128), "dear"), *LAUNCH)
+    results, stats = srv.drain()
+    assert srv.drains == 1
+    np.testing.assert_array_equal(
+        np.asarray(b.gmem())[128:160], np.arange(32) + 62)
+
+
+def test_dependent_fails_when_producer_dropped():
+    """A producer dropped after MAX_ATTEMPTS takes its dependents with
+    it: the dependent's future fails instead of requeueing forever."""
+    srv = rt.RuntimeServer(n_sm=1, policy="bucket")
+    g0 = np.zeros(128, np.int32)
+    s = srv.stream(g0, client="sick")
+    a = s.launch(srv.registry.load(_addk(1, out_at=0), "p"), *LAUNCH)
+    b = s.launch(srv.registry.load(_addk(2, out_at=0), "q"), *LAUNCH)
+    # poison the producer's gmem behind the validator's back
+    srv._pending[0] = srv._pending[0]._replace(
+        spec=srv._pending[0].spec._replace(
+            gmem=srv._pending[0].spec.gmem.reshape(2, -1)))
+    for _ in range(srv.MAX_ATTEMPTS):
+        with pytest.raises(Exception):
+            srv.drain()
+    assert srv.pending() == 0          # neither request leaks
+    assert a.done() and b.done()
+    with pytest.raises(Exception):
+        a.result()
+    with pytest.raises(RuntimeError, match="dropped"):
+        b.result()
+    assert srv.tenant_stats["sick"].dropped == 2
+    assert srv._dep_waiters == {} and srv._dep_gmem == {}
+    assert srv._dep_dropped == set()
+
+
+def test_dep_gmem_footprint_before_materialization():
+    """DepGmem quacks enough like an array for footprint bucketing and
+    accounting before the producer's memory exists."""
+    d = DepGmem(ticket=7, length=200)
+    assert d.shape == (200,)
+    assert rt.bucket_gmem_len(d.shape[0]) == 256
+
+
+def test_submit_rejects_unknown_producer_ticket():
+    srv = rt.RuntimeServer(n_sm=1)
+    with pytest.raises(ValueError, match="not pending"):
+        srv.submit(_addk(1), *LAUNCH, DepGmem(ticket=99, length=128))
+
+
+def test_submit_normalizes_dep_gmem_length_to_producer():
+    """A caller-supplied DepGmem length is never trusted: the dependent
+    buckets on the memory that will actually be materialized, so
+    window-mates merged on its footprint cannot silently pad to the
+    producer's real width."""
+    srv = rt.RuntimeServer(n_sm=1)
+    t = srv.submit(_addk(1), *LAUNCH, _gmem(8192), client="big")
+    srv.submit(_addk(2), *LAUNCH, DepGmem(ticket=t, length=64),
+               client="dep")
+    assert srv._pending[-1].spec.gmem.length == 8192
+    srv._pending.clear()
+    srv._dep_waiters.clear()
+
+
+def test_resolved_tail_chains_concretely():
+    """Chaining on an already-resolved tail snapshots its memory — no
+    dependency edge, no extra pending entry."""
+    srv = rt.RuntimeServer(n_sm=1)
+    g0 = np.zeros(128, np.int32)
+    g0[:32] = np.arange(32)
+    s = srv.stream(g0, client="chain")
+    a = s.launch(srv.registry.load(_addk(1, out_at=0), "p"), *LAUNCH)
+    a.wait()                           # resolve the tail first
+    b = s.launch(srv.registry.load(_addk(2, out_at=0), "q"), *LAUNCH)
+    assert srv._dep_waiters == {}      # concrete snapshot, not an edge
+    np.testing.assert_array_equal(
+        np.asarray(b.gmem())[:32], np.arange(32) + 3)

@@ -1,0 +1,45 @@
+"""Tier-1 mirror of the CI docs-integrity step: the architecture and
+tuning guides must exist, and no relative link in README.md/docs/*.md
+may dangle (scripts/check_docs.py is the single source of truth)."""
+import importlib.util
+import pathlib
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def _checker():
+    spec = importlib.util.spec_from_file_location(
+        "check_docs", ROOT / "scripts" / "check_docs.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_docs_exist():
+    assert (ROOT / "docs" / "architecture.md").exists()
+    assert (ROOT / "docs" / "runtime-tuning.md").exists()
+
+
+def test_docs_are_scanned():
+    mod = _checker()
+    files = [p.name for p in mod.doc_files(ROOT)]
+    assert "README.md" in files
+    assert "architecture.md" in files and "runtime-tuning.md" in files
+
+
+def test_no_broken_relative_links():
+    mod = _checker()
+    assert mod.broken_links(ROOT) == []
+
+
+def test_checker_flags_dangling_link(tmp_path):
+    """The checker actually catches a dangling link (not vacuously
+    green)."""
+    (tmp_path / "docs").mkdir()
+    (tmp_path / "README.md").write_text(
+        "see [guide](docs/missing.md) and [ok](docs/ok.md)")
+    (tmp_path / "docs" / "ok.md").write_text("fine")
+    mod = _checker()
+    bad = mod.broken_links(tmp_path)
+    assert len(bad) == 1
+    assert bad[0][1] == "docs/missing.md"

@@ -31,7 +31,7 @@ try:
 except ImportError:          # optional extra: the seeded fuzz still runs
     hypothesis = None
 
-POLICY_NAMES = ("monolithic", "bucket", "fair")
+POLICY_NAMES = ("monolithic", "bucket", "fair", "balanced")
 
 #: fuzz pool: small launches only (1-4 blocks, warps 1-8) so every
 #: bucketed shape is shared with the rest of the suite's jit caches
@@ -451,7 +451,9 @@ def _kern(region_in, region_out, op):
 def test_queued_stream_in_order_across_buckets():
     """In-stream dataflow order survives the policy landing a stream's
     launches in different sub-batches: chained (x+1)*2 is exact even
-    with a large-bucket tenant sharing every window."""
+    with a large-bucket tenant sharing every window.  Chaining enqueues
+    a dependency edge instead of flushing, so the whole chain (and the
+    other tenant) drains in ONE topologically-ordered drain."""
     srv = rt.RuntimeServer(n_sm=2, policy="bucket")
     m1 = srv.registry.load(_kern(0, 64, "add1"), "add1")
     m2 = srv.registry.load(_kern(64, 128, "double"), "double")
@@ -463,13 +465,14 @@ def test_queued_stream_in_order_across_buckets():
     g0[:32] = np.arange(32)
     s = srv.stream(g0, client="chain")
     a = s.launch(m1, (1, 1), (32, 1))
-    b = s.launch(m2, (1, 1), (32, 1))   # chains on a's resolved output
+    b = s.launch(m2, (1, 1), (32, 1))   # dependency edge on a, no flush
+    assert srv.pending() == 3           # nothing drained at enqueue time
     np.testing.assert_array_equal(np.asarray(b.gmem())[128:160],
                                   (np.arange(32) + 1) * 2)
     assert a.done() and b.done()
     _assert_bit_identical(fut_tr.result(), seq_tr)
-    # the two chained launches ran in dataflow order across two drains
-    assert srv.drains >= 2
+    # the chained launches ran in dataflow order inside a SINGLE drain
+    assert srv.drains == 1
 
 
 def test_event_fires_only_after_producer_sub_batch():
@@ -532,11 +535,13 @@ def test_queued_stream_requires_memory():
 def test_make_policy_coercion():
     assert isinstance(pol.make_policy(None), pol.BucketDrain)
     assert isinstance(pol.make_policy("monolithic"), pol.MonolithicDrain)
+    assert isinstance(pol.make_policy("balanced"), pol.BalancedDrain)
     inst = pol.FairBucketDrain()
     assert pol.make_policy(inst) is inst
     with pytest.raises(ValueError, match="unknown drain policy"):
         pol.make_policy("lifo")
-    assert sorted(rt.POLICIES) == ["bucket", "fair", "monolithic"]
+    assert sorted(rt.POLICIES) == ["balanced", "bucket", "fair",
+                                   "monolithic"]
 
 
 def test_footprint_and_warp_buckets():
@@ -557,3 +562,5 @@ def test_empty_drain_reports_policy_fields():
     assert stats.n_sub_batches == 0 and stats.n_windows == 0
     assert stats.by_tenant == {} and stats.by_bucket == {}
     assert stats.padded_gmem_words == 0 and stats.occupancy == 0.0
+    assert stats.makespan_cycles == 0 and stats.busy_cycles == 0
+    assert stats.duration_balance == 0.0
