@@ -32,11 +32,51 @@ from . import isa
 Reg = Union[str, int]
 
 
-def _reg(r: Reg) -> int:
+class AsmError(Exception):
+    """An assembly-time rejection with an actionable message: bad
+    register names, duplicate or undefined labels, out-of-range
+    immediates, unknown mnemonics.  Subclasses ``KeyError`` via
+    :class:`UndefinedLabel` where historical callers catch that."""
+
+
+class UndefinedLabel(AsmError, KeyError):
+    """A branch references a label no line defines."""
+
+    def __str__(self):          # KeyError would repr() the message
+        return self.args[0] if self.args else ""
+
+
+#: register index must fit the encoding's int32 field sanely; the
+#: machine's real file is MachineConfig.n_regs (default 16) / 4 preds,
+#: but the assembler only rejects what could never be configured
+MAX_REG = 255
+MAX_PRED = 3
+
+
+def _reg(r: Reg, pred: bool = False) -> int:
     if isinstance(r, str):
-        assert r[0] in "rp", f"bad register {r!r}"
-        return int(r[1:])
-    return int(r)
+        kind = "p" if pred else "r"
+        if not r or r[0] != kind or not r[1:].isdigit():
+            raise AsmError(
+                f"bad {'predicate ' if pred else ''}register {r!r}: "
+                f"expected {kind}<index> (e.g. {kind}{0})")
+        idx = int(r[1:])
+    else:
+        idx = int(r)
+    bound = MAX_PRED if pred else MAX_REG
+    if not 0 <= idx <= bound:
+        raise AsmError(
+            f"register index {idx} out of range 0..{bound} "
+            f"({'predicate file' if pred else 'register file'})")
+    return idx
+
+
+def _imm32(v: int) -> int:
+    if not -(1 << 31) <= v < (1 << 32):
+        raise AsmError(
+            f"immediate {v} does not fit in 32 bits "
+            f"(range {-(1 << 31)}..{(1 << 32) - 1})")
+    return int(v)
 
 
 class Program:
@@ -54,14 +94,28 @@ class Program:
     def label(self, name: str, sync: bool = False) -> None:
         """Define a label at the current address; ``sync=True`` marks the
         next emitted instruction as a reconvergence point (``.S``)."""
+        if name in self.labels:
+            raise AsmError(
+                f"duplicate label {name!r} in {self.name}: first "
+                f"defined at address {self.labels[name]}, redefined at "
+                f"{len(self.rows)}")
         self.labels[name] = len(self.rows)
         if sync:
             self._sync_next = True
 
     def guard(self, pred: Reg, cond: str) -> "Program":
         """Guard the next instruction: ``p.guard('p0','LT').bra('loop')``."""
-        self._guard = (_reg(pred), isa.COND_IDS[cond])
+        self._guard = (_reg(pred, pred=True), self._cond(cond))
         return self
+
+    @staticmethod
+    def _cond(cond: str) -> int:
+        try:
+            return isa.COND_IDS[cond]
+        except KeyError:
+            raise AsmError(
+                f"unknown condition code {cond!r}; choose from "
+                f"{sorted(isa.COND_IDS)}") from None
 
     def _emit(self, op, dst=0, src1=0, src2=0, src3=0, imm=0, flags=0,
               pdst=0, label=None):
@@ -73,8 +127,8 @@ class Program:
         if self._sync_next:
             flags |= isa.FLAG_SYNC
             self._sync_next = False
-        row = isa.encode(op, dst, src1, src2, src3, imm, flags, gpred,
-                         gcond, pdst)
+        row = isa.encode(op, dst, src1, src2, src3, _imm32(imm), flags,
+                         gpred, gcond, pdst)
         if label is not None:
             self._fixups.append((len(self.rows), label))
         self.rows.append(row)
@@ -127,7 +181,7 @@ class Program:
         else:
             imm, s2 = 0, _reg(b)
         self._emit(isa.ISETP, 0, _reg(a), s2, imm=imm, flags=flags,
-                   pdst=_reg(pdst))
+                   pdst=_reg(pdst, pred=True))
 
     def iset(self, dst, pred, cond):
         """dst = LUT[cond, pred] ? 1 : 0 (materialize a predicate).
@@ -136,14 +190,14 @@ class Program:
         where the condition is false still execute and write 0).
         """
         self._emit(isa.ISET, _reg(dst), 0, 0)
-        self.rows[-1][isa.F_GPRED] = _reg(pred)
-        self.rows[-1][isa.F_GCOND] = isa.COND_IDS[cond]
+        self.rows[-1][isa.F_GPRED] = _reg(pred, pred=True)
+        self.rows[-1][isa.F_GCOND] = self._cond(cond)
 
     def selp(self, dst, a, b, pred, cond):
         """dst = cond(pred) ? a : b (predicate as source, not guard)."""
         self._emit(isa.SELP, _reg(dst), _reg(a), _reg(b))
-        self.rows[-1][isa.F_GPRED] = _reg(pred)
-        self.rows[-1][isa.F_GCOND] = isa.COND_IDS[cond]
+        self.rows[-1][isa.F_GPRED] = _reg(pred, pred=True)
+        self.rows[-1][isa.F_GCOND] = self._cond(cond)
 
     # ------------------------------------------------------------ special
     def s2r(self, dst, sr: int):
@@ -156,12 +210,20 @@ class Program:
     def sts(self, base, val, off=0): self._emit(isa.STS, 0, _reg(base), _reg(val), imm=off)
 
     # ------------------------------------------------------- control flow
-    def bra(self, label: str):
-        self._emit(isa.BRA, label=label)
+    def bra(self, label: Union[str, int]):
+        """Branch to a label, or directly to a numeric address (the
+        form ``decode_str`` prints, so listings re-assemble)."""
+        if isinstance(label, int):
+            self._emit(isa.BRA, imm=label)
+        else:
+            self._emit(isa.BRA, label=label)
 
-    def ssy(self, label: str):
+    def ssy(self, label: Union[str, int]):
         """Push the reconvergence point for the next divergent branch."""
-        self._emit(isa.SSY, label=label)
+        if isinstance(label, int):
+            self._emit(isa.SSY, imm=label)
+        else:
+            self._emit(isa.SSY, label=label)
 
     def bar(self):
         self._emit(isa.BAR)
@@ -176,15 +238,19 @@ class Program:
     def finish(self, pad_to: Optional[int] = None) -> np.ndarray:
         for idx, label in self._fixups:
             if label not in self.labels:
-                raise KeyError(f"undefined label {label!r} in {self.name}")
+                defined = ", ".join(sorted(self.labels)) or "(none)"
+                raise UndefinedLabel(
+                    f"undefined label {label!r} in {self.name} "
+                    f"(instruction {idx}); defined labels: {defined}")
             self.rows[idx][isa.F_IMM] = self.labels[label]
         code = np.stack(self.rows).astype(np.int32)
         if pad_to is not None:
             if len(code) > pad_to:
                 raise ValueError(f"{self.name}: {len(code)} instrs > pad {pad_to}")
-            pad = np.zeros((pad_to - len(code), isa.NUM_FIELDS), np.int32)
-            pad[:, isa.F_OP] = isa.EXIT  # padding traps to EXIT
-            code = np.concatenate([code, pad])
+            # padding traps to EXIT (encoded like an emitted EXIT, so
+            # padded listings round-trip through decode_str/assemble)
+            code = np.concatenate(
+                [code, isa.exit_pad_rows(pad_to - len(code))])
         return code
 
     def disasm(self) -> str:
@@ -205,9 +271,20 @@ _LINE = re.compile(
     r"(?:(?:@(?P<gp>p\d)\.(?P<gc>\w+)\s+)?(?P<body>\S.*?))?\s*(?:;.*)?$")
 
 
+#: mnemonics the text assembler understands (3-operand ALU default path)
+_ALU3 = {"IADD", "ISUB", "IMUL", "IMIN", "IMAX", "XOR", "SHL", "SHR",
+         "SAR"}
+
+
 def assemble(text: str, name: str = "kernel",
              pad_to: Optional[int] = None) -> np.ndarray:
-    """Assemble a SASS-like text listing into an instruction array."""
+    """Assemble a SASS-like text listing into an instruction array.
+
+    Errors (unknown mnemonics, malformed operands, bad registers,
+    out-of-range immediates) raise :class:`AsmError` carrying the
+    offending line number and text; duplicate labels and undefined
+    branch targets are rejected the same way.
+    """
     p = Program(name)
     srmap = {"tidx": isa.SR_TIDX, "tidy": isa.SR_TIDY, "ctax": isa.SR_CTAX,
              "ctay": isa.SR_CTAY, "ntidx": isa.SR_NTIDX,
@@ -223,15 +300,12 @@ def assemble(text: str, name: str = "kernel",
             return tok
         return tok  # register name
 
-    for raw in text.splitlines():
-        m = _LINE.match(raw)
-        if not m or (m.group("label") is None and m.group("body") is None):
-            continue
+    def one_line(m) -> None:
         if m.group("label"):
             p.label(m.group("label"), sync=bool(m.group("sync")))
         body = m.group("body")
         if not body:
-            continue
+            return
         if m.group("gp"):
             p.guard(m.group("gp"), m.group("gc").upper())
         mem = re.match(r"(\w+(?:\.S)?)\s*(.*)", body)
@@ -252,7 +326,9 @@ def assemble(text: str, name: str = "kernel",
         elif mn in ("STG", "STS"):
             getattr(p, mn.lower())(base, args[1], off)
         elif mn in ("BRA", "SSY"):
-            getattr(p, mn.lower())(args[0])
+            tgt = args[0]
+            neg = tgt.lstrip("-")
+            getattr(p, mn.lower())(int(tgt) if neg.isdigit() else tgt)
         elif mn == "S2R":
             sr = args[1]
             srv = srmap[sr[2:].lower()] if sr.lower().startswith("sr") and \
@@ -267,13 +343,30 @@ def assemble(text: str, name: str = "kernel",
         elif mn == "IMAD":
             p.imad(args[0], args[1], args[2], args[3])
         elif mn in ("NOT", "IABS"):
-            getattr(p, mn.lower() + ("_" if mn == "NOT" else ""))(args[0], args[1])
+            getattr(p, mn.lower() + ("_" if mn == "NOT" else ""))(
+                args[0], args[1])
         elif mn == "MOV":
             p.mov(args[0], val(args[1]))
         elif mn in ("EXIT", "NOP", "BAR"):
             getattr(p, mn.lower())()
         elif mn in ("AND", "OR"):
             getattr(p, mn.lower() + "_")(args[0], args[1], val(args[2]))
-        else:
+        elif mn in _ALU3:
             getattr(p, mn.lower())(args[0], args[1], val(args[2]))
+        else:
+            raise AsmError(f"unknown instruction {mn!r}")
+
+    for lineno, raw in enumerate(text.splitlines(), 1):
+        m = _LINE.match(raw)
+        if not m or (m.group("label") is None and m.group("body") is None):
+            continue
+        try:
+            one_line(m)
+        except AsmError as e:
+            raise AsmError(
+                f"{name}: line {lineno}: {raw.strip()!r}: {e}") from None
+        except (IndexError, ValueError, AttributeError) as e:
+            raise AsmError(
+                f"{name}: line {lineno}: {raw.strip()!r}: malformed "
+                f"operands ({e})") from None
     return p.finish(pad_to=pad_to)

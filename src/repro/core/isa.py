@@ -200,8 +200,27 @@ def encode(op, dst=0, src1=0, src2=0, src3=0, imm=0, flags=0, gpred=0,
     return row
 
 
+def exit_pad_rows(n: int) -> np.ndarray:
+    """``(n, NUM_FIELDS)`` of EXIT rows encoded exactly like an emitted
+    EXIT (gcond T), so padded listings round-trip through
+    ``decode_str``/``assemble``.  The single source of trap padding for
+    ``asm.Program.finish`` and ``runtime.registry.pad_code``."""
+    pad = np.zeros((n, NUM_FIELDS), np.int32)
+    pad[:, F_OP] = EXIT
+    pad[:, F_GCOND] = COND_T
+    return pad
+
+
 def decode_str(row) -> str:
-    """Human-readable disassembly of one encoded instruction row."""
+    """Human-readable disassembly of one encoded instruction row.
+
+    The output is *assembler-grade*: for every instruction the text
+    assembler can express, ``asm.assemble(decode_str(row))`` re-encodes
+    the identical row (pinned by the round-trip property tests in
+    ``tests/test_asm_roundtrip.py``) — branch targets print as numeric
+    addresses, MOV prints its real operand count, and ISET/SELP print
+    their predicate-source fields.
+    """
     op = int(row[F_OP])
     name = OP_NAMES.get(op, f"OP{op}")
     parts = [name]
@@ -211,6 +230,8 @@ def decode_str(row) -> str:
     guard = ""
     if fl & FLAG_GUARD:
         guard = f"@p{int(row[F_GPRED])}.{COND_NAMES.get(int(row[F_GCOND]), '?')} "
+    src2i = f"#{int(row[F_IMM])}" if fl & FLAG_SRC2_IMM \
+        else f"r{int(row[F_SRC2])}"
     if op in (BRA, SSY):
         parts.append(str(int(row[F_IMM])))
     elif op == S2R:
@@ -220,13 +241,22 @@ def decode_str(row) -> str:
     elif op in (STG, STS):
         parts.append(f"[r{int(row[F_SRC1])}+{int(row[F_IMM])}], r{int(row[F_SRC2])}")
     elif op == ISETP:
-        src2 = f"#{int(row[F_IMM])}" if fl & FLAG_SRC2_IMM else f"r{int(row[F_SRC2])}"
-        parts.append(f"p{int(row[F_PDST])}, r{int(row[F_SRC1])}, {src2}")
+        parts.append(f"p{int(row[F_PDST])}, r{int(row[F_SRC1])}, {src2i}")
+    elif op == MOV:
+        parts.append(f"r{int(row[F_DST])}, {src2i}")
+    elif op == ISET:
+        parts.append(f"r{int(row[F_DST])}, p{int(row[F_GPRED])}, "
+                     f"{COND_NAMES.get(int(row[F_GCOND]), '?')}")
+    elif op == SELP:
+        parts.append(f"r{int(row[F_DST])}, r{int(row[F_SRC1])}, "
+                     f"r{int(row[F_SRC2])}, p{int(row[F_GPRED])}, "
+                     f"{COND_NAMES.get(int(row[F_GCOND]), '?')}")
+    elif op in (NOT, IABS):
+        parts.append(f"r{int(row[F_DST])}, r{int(row[F_SRC1])}")
     elif op in (EXIT, NOP, BAR):
         pass
     else:
-        src2 = f"#{int(row[F_IMM])}" if fl & FLAG_SRC2_IMM else f"r{int(row[F_SRC2])}"
-        ops = [f"r{int(row[F_DST])}", f"r{int(row[F_SRC1])}", src2]
+        ops = [f"r{int(row[F_DST])}", f"r{int(row[F_SRC1])}", src2i]
         if op == IMAD:
             ops.append(f"r{int(row[F_SRC3])}")
         parts.append(", ".join(ops))

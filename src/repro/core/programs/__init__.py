@@ -26,3 +26,13 @@ ALL = {
     "reduction": reduction,
     "transpose": transpose,
 }
+
+
+def compiled_kernels():
+    """The DSL-compiled kernel modules (histogram, scan, spmv) — same
+    ``build/launch/make_gmem/oracle/out_slice/n_threads`` interface as
+    the hand-written five, but authored in the ``repro.compiler`` front
+    end and compiled at build() time.  Imported lazily so ``core`` has
+    no hard dependency on the compiler layer."""
+    from ...compiler.kernels import COMPILED
+    return dict(COMPILED)

@@ -5,8 +5,10 @@
         [--policy bucket|fair|monolithic|balanced] \
         [--skewed | --longtail] [--baseline]
 
-Simulated tenants submit a mixed workload — all five paper kernels at
-several input sizes — to the device runtime's launch queue
+Simulated tenants submit a mixed workload — the five paper kernels
+plus the DSL-compiled histogram / prefix-scan / ELL-SpMV kernels
+(``repro.compiler``), at several input sizes — to the device runtime's
+launch queue
 (:class:`repro.runtime.RuntimeServer`), whose drain policy cuts each
 window of pending launches into SM-packed dispatch groups on one
 compiled machine: the overlay property ("new CUDA binary, no FPGA
@@ -31,20 +33,35 @@ import numpy as np
 
 from repro import runtime as rt
 from repro.core import asm, isa, scheduler
-from repro.core.programs import ALL
+from repro.core.programs import ALL, compiled_kernels
 
-#: per-kernel tenant input sizes (reduction stays single-pass)
+#: per-kernel tenant input sizes (reduction stays single-pass; the
+#: DSL-compiled kernels ride along with their own geometries and
+#: land in *different* code buckets than the hand-written five, so
+#: the mixed workload exercises genuinely heterogeneous footprints)
 SIZES = {"autocorr": (32, 64, 128), "bitonic": (32, 64, 128),
-         "matmul": (32, 64), "reduction": (32,), "transpose": (32, 64)}
+         "matmul": (32, 64), "reduction": (32,), "transpose": (32, 64),
+         "histogram": (64, 128), "scan": (64, 128), "spmv": (32, 64)}
 
 
-def build_workload(n_launches: int, seed: int = 0):
-    names = sorted(ALL)
+def workload_kernels(include_compiled: bool = True):
+    """Name -> module pool the mixed workload draws from: the paper's
+    five hand-written benchmarks plus the DSL-compiled kernels."""
+    pool = dict(ALL)
+    if include_compiled:
+        pool.update(compiled_kernels())
+    return pool
+
+
+def build_workload(n_launches: int, seed: int = 0,
+                   include_compiled: bool = True):
+    pool = workload_kernels(include_compiled)
+    names = sorted(pool)
     counts = {k: 0 for k in names}
     work = []
     for i in range(n_launches):
         name = names[i % len(names)]
-        mod = ALL[name]
+        mod = pool[name]
         sizes = SIZES[name]
         n = sizes[counts[name] % len(sizes)]
         counts[name] += 1
@@ -162,14 +179,16 @@ def run_sequential_baseline(work) -> float:
 
 
 def drain_workload(work, n_sm: int, tenants: int = 4,
-                   policy: str = "bucket"):
+                   policy: str = "bucket",
+                   max_window_cycles: int = None):
     """Submit ``work`` to a fresh cold-cache server and drain it.
 
     Oracle-checks every ticket; returns ``(server, stats, wall_s)``.
     """
     import jax
     jax.clear_caches()
-    srv = rt.RuntimeServer(n_sm=n_sm, policy=policy)
+    srv = rt.RuntimeServer(n_sm=n_sm, policy=policy,
+                           max_window_cycles=max_window_cycles)
     tickets = {}
     t0 = time.perf_counter()
     for i, (name, mod, n, code, (grid, bd), g0) in enumerate(work):
@@ -227,6 +246,13 @@ def main(argv=None):
                          "(the workload the balanced drain exists for)")
     ap.add_argument("--baseline", action="store_true",
                     help="also time sequential run_grid calls (cold)")
+    ap.add_argument("--no-compiled", action="store_true",
+                    help="legacy five-kernel workload only (skip the "
+                         "DSL-compiled histogram/scan/spmv tenants)")
+    ap.add_argument("--max-window-cycles", type=int, default=None,
+                    help="duration budget per drain window: stop "
+                         "packing a window once its CostModel-predicted"
+                         " cycles exceed this (bounds drain latency)")
     args = ap.parse_args(argv)
 
     if args.skewed and args.longtail:
@@ -236,7 +262,8 @@ def main(argv=None):
     elif args.longtail:
         work = build_longtail_workload(args.launches, args.seed)
     else:
-        work = build_workload(args.launches, args.seed)
+        work = build_workload(args.launches, args.seed,
+                              include_compiled=not args.no_compiled)
     t_seq = None
     if args.baseline:
         t_seq = run_sequential_baseline(work)
@@ -245,7 +272,8 @@ def main(argv=None):
               f"({len(work) / t_seq:.2f} launches/s)")
 
     srv, stats, wall = drain_workload(work, args.n_sm, args.tenants,
-                                      args.policy)
+                                      args.policy,
+                                      args.max_window_cycles)
     print_stats(srv, stats, wall, args.n_sm, args.tenants)
     if t_seq is not None:
         print(f"[serve] throughput vs sequential: {t_seq / wall:.2f}x")

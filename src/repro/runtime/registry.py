@@ -113,9 +113,7 @@ def pad_code(code: np.ndarray, pad_to: Optional[int] = None) -> np.ndarray:
     target = bucket_code_len(len(code)) if pad_to is None else pad_to
     if len(code) > target:
         raise ValueError(f"program of {len(code)} instrs > bucket {target}")
-    pad = np.zeros((target - len(code), isa.NUM_FIELDS), np.int32)
-    pad[:, isa.F_OP] = isa.EXIT
-    return np.concatenate([code, pad])
+    return np.concatenate([code, isa.exit_pad_rows(target - len(code))])
 
 
 class Module(NamedTuple):

@@ -102,6 +102,11 @@ class DrainStats(NamedTuple):
         return self.busy_cycles / denom if denom else 0.0
 
 
+#: sentinel distinguishing "argument not passed" (inherit the server's
+#: setting) from an explicit None ("unbounded for this call")
+_INHERIT = object()
+
+
 class RuntimeServer:
     """Batches pending launches from concurrent clients into super-steps."""
 
@@ -114,7 +119,8 @@ class RuntimeServer:
                  registry: Optional[ModuleRegistry] = None,
                  policy: Union[str, DrainPolicy, None] = None,
                  max_pending: Optional[int] = 1024,
-                 max_inflight_per_tenant: Optional[int] = 256):
+                 max_inflight_per_tenant: Optional[int] = 256,
+                 max_window_cycles: Optional[int] = None):
         self.n_sm = n_sm
         self.cfg = cfg
         # default: one SM-wide super-step per dispatch — small groups
@@ -123,6 +129,13 @@ class RuntimeServer:
         # mixed-tenant batches
         self.chunk = max(2, n_sm) if chunk is None else chunk
         self.max_batch = max_batch
+        #: duration budget per drain window: window packing stops once
+        #: the CostModel-predicted cycles of the packed launches exceed
+        #: this (None = unbounded).  Complements ``max_windows`` — that
+        #: bounds how many windows one drain() call processes, this
+        #: bounds how long each window occupies the SMs, so a drain
+        #: call has a latency budget whatever the tenants submitted.
+        self.max_window_cycles = max_window_cycles
         self.registry = registry or ModuleRegistry(max_modules=1024)
         self.policy = pol.make_policy(policy)
         self.max_pending = max_pending
@@ -263,19 +276,34 @@ class RuntimeServer:
 
     # ---------------------------------------------------------------- drain
 
-    def _pack_window(self, queue: List[LaunchRequest]
+    def _pack_window(self, queue: List[LaunchRequest],
+                     max_window_cycles=_INHERIT
                      ) -> List[LaunchRequest]:
-        """Pop the next window off ``queue``: bounded by BOTH the launch
-        bucket (max_batch) and the executor's exact-cycle block budget,
+        """Pop the next window off ``queue``: bounded by the launch
+        bucket (max_batch), the executor's exact-cycle block budget —
         so a full window of individually-valid launches can never trip
         the accumulator bound mid-drain (submit() already rejects any
-        single launch that could not fit alone)."""
-        window, blocks_packed = [], 0
+        single launch that could not fit alone) — and, when
+        ``max_window_cycles`` is set (the server knob, or a per-call
+        value where an explicit None means unbounded), by the
+        CostModel-predicted duration of the packed launches: packing
+        stops before the window's predicted block-cycles exceed the
+        budget.  The first launch always packs (a single over-budget
+        launch must still drain), so the budget bounds window *latency*
+        without ever starving the queue."""
+        budget = self.max_window_cycles if max_window_cycles is _INHERIT \
+            else max_window_cycles
+        window, blocks_packed, cycles_packed = [], 0, 0.0
         while queue and len(window) < self.max_batch:
             nxt = queue[0]
             nb = nxt.spec.grid[0] * nxt.spec.grid[1]
             if window and blocks_packed + nb > self.block_budget():
                 break
+            if budget is not None:
+                dur = pol.request_duration(nxt, self.registry)
+                if window and cycles_packed + dur > budget:
+                    break
+                cycles_packed += dur
             window.append(queue.pop(0))
             blocks_packed += nb
         return window
@@ -451,12 +479,17 @@ class RuntimeServer:
                 ts.useful_gmem_words += useful
                 ts.padded_gmem_words += padded
 
-    def drain(self, max_windows: Optional[int] = None
+    def drain(self, max_windows: Optional[int] = None,
+              max_window_cycles=_INHERIT
               ) -> Tuple[Dict[int, ex.GridResult], DrainStats]:
         """Execute pending launches in policy-cut, SM-packed sub-batches.
 
         Packs up to ``max_batch`` launches per window (``max_windows``
-        bounds how many windows this call processes; default all), cuts
+        bounds how many windows this call processes; default all;
+        ``max_window_cycles`` overrides the server's per-window
+        duration budget for this call — windows stop packing before
+        their CostModel-predicted cycles exceed it, and an explicit
+        ``None`` means unbounded even on a budgeted server), cuts
         each window into dispatch groups via the drain policy —
         **topologically ordered** so a producer's group always executes
         before its dependents' — and runs each group through
@@ -498,7 +531,7 @@ class RuntimeServer:
         requeue: List[LaunchRequest] = []
         first_error: Optional[BaseException] = None
         while queue and (max_windows is None or n_windows < max_windows):
-            window = self._pack_window(queue)
+            window = self._pack_window(queue, max_window_cycles)
             n_windows += 1
             for sb in self._topo_order(self._cut(window)):
                 # materialize dependent launches' memories from their

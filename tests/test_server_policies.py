@@ -294,6 +294,133 @@ def test_arrange_round_robin_is_stable_within_tenant():
     assert a_order == sorted(a_order)
 
 
+# ------------------------------------------- duration-budgeted windows
+
+def _predict_duration(srv, code, n):
+    mod = srv.registry.as_module(code)
+    return srv.registry.cost_model.predicted_block_cycles(mod)
+
+
+def test_window_cycle_budget_splits_windows():
+    """max_window_cycles bounds each window by CostModel-predicted
+    duration: a queue whose total prediction exceeds the budget drains
+    in multiple windows, bit-exact with the unbounded drain.  (The
+    prediction is stabilized by observing one drain first — mid-drain
+    the model keeps learning, which is the point of the cost model.)"""
+    code, g0, seq = _sequential("bitonic", 32, 0)
+    launch = ALL["bitonic"].launch(32)
+    srv = rt.RuntimeServer(n_sm=2, policy="bucket")
+    srv.submit(code, *launch, g0.copy())
+    srv.drain()                          # observe the real cycles once
+    per_launch = _predict_duration(srv, code, 32)
+    # budget fits 2 observed launches per window -> 6 launches, 3 windows
+    srv.max_window_cycles = int(2.5 * per_launch)
+    want = {}
+    for _ in range(6):
+        t = srv.submit(code, *launch, g0.copy())
+        want[t] = seq
+    results, stats = srv.drain()
+    assert stats.n_windows == 3
+    assert sorted(results) == sorted(want)
+    for t, s in want.items():
+        _assert_bit_identical(results[t], s)
+
+
+def test_window_cycle_budget_never_starves():
+    """A single launch predicted over the budget still packs (the
+    budget bounds latency, it must not deadlock the queue)."""
+    code, g0, seq = _sequential("bitonic", 32, 0)
+    srv = rt.RuntimeServer(n_sm=1, policy="bucket", max_window_cycles=1)
+    t = srv.submit(code, *ALL["bitonic"].launch(32), g0.copy())
+    results, stats = srv.drain()
+    _assert_bit_identical(results[t], seq)
+    assert stats.n_windows >= 1 and srv.pending() == 0
+
+
+def test_window_cycle_budget_drain_override_and_max_windows():
+    """drain(max_window_cycles=...) overrides the server knob and
+    composes with max_windows: one bounded window per call leaves the
+    rest pending."""
+    code, g0, seq = _sequential("bitonic", 32, 0)
+    launch = ALL["bitonic"].launch(32)
+    srv = rt.RuntimeServer(n_sm=2, policy="bucket")
+    per_launch = _predict_duration(srv, code, 32)
+    tickets = [srv.submit(code, *launch, g0.copy()) for _ in range(4)]
+    results, stats = srv.drain(max_windows=1,
+                               max_window_cycles=int(1.5 * per_launch))
+    assert stats.n_windows == 1
+    assert list(results) == [tickets[0]]
+    assert srv.pending() == 3
+    rest, _ = srv.drain()
+    assert sorted(rest) == sorted(tickets[1:])
+    for t in tickets:
+        _assert_bit_identical((results | rest)[t], seq)
+
+
+def test_window_cycle_budget_explicit_none_unbounds_one_drain():
+    """drain(max_window_cycles=None) means unbounded for that call even
+    on a budgeted server (None is not 'inherit' — the sentinel is)."""
+    code, g0, _ = _sequential("bitonic", 32, 0)
+    launch = ALL["bitonic"].launch(32)
+    srv = rt.RuntimeServer(n_sm=2, policy="bucket", max_window_cycles=1)
+    for _ in range(4):
+        srv.submit(code, *launch, g0.copy())
+    _, stats = srv.drain(max_window_cycles=None)
+    assert stats.n_windows == 1               # override: one big window
+    for _ in range(4):
+        srv.submit(code, *launch, g0.copy())
+    _, stats = srv.drain()                    # server budget applies
+    assert stats.n_windows == 4
+
+
+def test_window_budget_unused_skips_cost_lookups():
+    """With no budget set, packing must not touch the registry (no
+    hit/miss churn or LRU reordering from duration predictions)."""
+    code, g0, _ = _sequential("bitonic", 32, 0)
+    launch = ALL["bitonic"].launch(32)
+    srv = rt.RuntimeServer(n_sm=1, policy="bucket")
+    for _ in range(3):
+        srv.submit(code, *launch, g0.copy())
+    hits0 = srv.registry.hits + srv.registry.misses
+    window = srv._pack_window(list(srv._pending))
+    assert len(window) == 3
+    assert srv.registry.hits + srv.registry.misses == hits0
+    srv._pending.clear()
+
+
+def test_window_cycle_budget_unbounded_by_default():
+    """No budget -> the old single-window behaviour is unchanged."""
+    code, g0, _ = _sequential("bitonic", 32, 0)
+    launch = ALL["bitonic"].launch(32)
+    srv = rt.RuntimeServer(n_sm=2, policy="bucket")
+    assert srv.max_window_cycles is None
+    for _ in range(5):
+        srv.submit(code, *launch, g0.copy())
+    _, stats = srv.drain()
+    assert stats.n_windows == 1
+
+
+def test_window_cycle_budget_uses_observed_costs():
+    """After a drain observes real cycles, the budget packs against the
+    observed mean, not the static seed."""
+    code, g0, _ = _sequential("bitonic", 32, 0)
+    launch = ALL["bitonic"].launch(32)
+    srv = rt.RuntimeServer(n_sm=2, policy="bucket")
+    mod = srv.registry.as_module(code)
+    seed_est = srv.registry.cost_model.predicted_block_cycles(mod)
+    srv.submit(mod, *launch, g0.copy())
+    srv.drain()
+    observed = srv.registry.cost_model.predicted_block_cycles(mod)
+    assert observed != seed_est
+    # a budget of 1.5 observed launches packs one launch per window
+    srv.max_window_cycles = int(1.5 * observed)
+    for _ in range(4):
+        srv.submit(mod, *launch, g0.copy())
+    _, stats = srv.drain()
+    assert stats.n_windows == 4
+    assert stats.n_launches == 4
+
+
 # ---------------------------------------------------- admission control
 
 def test_admission_bounded_queue():
