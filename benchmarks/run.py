@@ -96,14 +96,17 @@ def drain_extras(stats):
     the padded/useful gmem words the memory-aware policies are judged
     on plus the executed duration telemetry (makespan = sum over
     sub-batches of busiest-SM cycles) the cost-model policy packs."""
-    return {"n_windows": stats.n_windows,
-            "n_sub_batches": stats.n_sub_batches,
-            "useful_gmem_words": int(stats.useful_gmem_words),
-            "padded_gmem_words": int(stats.padded_gmem_words),
-            "occupancy": round(stats.occupancy, 4),
-            "makespan_cycles": int(stats.makespan_cycles),
-            "busy_cycles": int(stats.busy_cycles),
-            "duration_balance": round(stats.duration_balance, 4)}
+    out = {"n_windows": stats.n_windows,
+           "n_sub_batches": stats.n_sub_batches,
+           "useful_gmem_words": int(stats.useful_gmem_words),
+           "padded_gmem_words": int(stats.padded_gmem_words),
+           "occupancy": round(stats.occupancy, 4),
+           "makespan_cycles": int(stats.makespan_cycles),
+           "busy_cycles": int(stats.busy_cycles),
+           "duration_balance": round(stats.duration_balance, 4)}
+    if stats.pool is not None:
+        out["pool"] = dict(stats.pool)
+    return out
 
 
 def table2_area():
@@ -267,6 +270,45 @@ def sched_wallclock(n: int | None = None, repeats: int = 1):
          f"blocks={grid[0] * grid[1]};sm_cycles={res.sm_cycles(1)}")
 
 
+def bench_fused_step(n=32, repeats=3):
+    """Per-step dispatch cost of the execute backends on one launch.
+
+    ``jnp`` and ``pallas`` dispatch five stage bodies per SM step;
+    ``pallas_fused`` runs the whole fetch/read/execute/write/control
+    step as ONE Pallas kernel.  All three are asserted bit-identical
+    (gmem + per-block cycles) before timing; wall time is warm
+    best-of-``repeats`` through run_grid with the jit caches hot, so
+    the ratio isolates per-step dispatch overhead rather than trace
+    time.  On CPU the fused kernel runs in interpret mode — the row
+    records the dispatch-count delta, not the fused-lowering win a
+    real accelerator backend would show.
+    """
+    mod = ALL["bitonic"]
+    code = mod.build(n)
+    g0 = mod.make_gmem(np.random.default_rng(0), n)
+    grid, bd = mod.launch(n)
+    res, wall = {}, {}
+    for be in ("jnp", "pallas", "pallas_fused"):
+        cfg = MachineConfig(execute_backend=be)
+        res[be] = scheduler.run_grid(code, grid, bd, g0.copy(), cfg)
+        best = float("inf")
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            scheduler.run_grid(code, grid, bd, g0.copy(), cfg)
+            best = min(best, time.perf_counter() - t0)
+        wall[be] = best
+    for be in ("pallas", "pallas_fused"):
+        np.testing.assert_array_equal(res[be].gmem, res["jnp"].gmem)
+        np.testing.assert_array_equal(res[be].cycles_per_block,
+                                      res["jnp"].cycles_per_block)
+    for be, w in wall.items():
+        emit(f"fused_step_{be}_bitonic_n{n}", w * 1e6,
+             f"vs_jnp={wall['jnp'] / w:.2f}x;"
+             f"cycles={int(res[be].cycles_per_block.sum())}",
+             extra={"backend": be, "wall_s": round(w, 6),
+                    "vs_jnp": round(wall["jnp"] / w, 4)})
+
+
 def bench_runtime_throughput(n_launches=16, sms=(1, 2, 4)):
     """Multi-tenant launch queue vs sequential run_grid calls.
 
@@ -294,14 +336,35 @@ def bench_runtime_throughput(n_launches=16, sms=(1, 2, 4)):
     emit(f"runtime_seq_{n_launches}x", t_seq * 1e6 / n_launches,
          f"launches_per_s={n_launches / t_seq:.2f}")
 
+    t_host = None
     for n_sm in sms:
         srv, stats, t_srv = drain_workload(work, n_sm)
+        t_host = t_srv                       # last n_sm: resident baseline
         emit(f"runtime_srv_{n_launches}x_{n_sm}sm",
              t_srv * 1e6 / n_launches,
              f"launches_per_s={n_launches / t_srv:.2f};"
              f"speedup_vs_seq={t_seq / t_srv:.2f};"
              f"batch_kernel_cycles={int(stats.per_sm_cycles.max())}",
              extra=drain_extras(stats))
+
+    # device-resident gmem pool at the last SM count: the same drain
+    # with tenant memory adopted once at submit and never rebuilt on the
+    # host between windows (PR 6).  The extra records the TRANSFERS
+    # counting hook so the BENCH point shows the host round-trips the
+    # pool removed alongside the wall-clock delta.
+    import repro.runtime as rt
+    rt.TRANSFERS.reset()
+    srv, stats, t_res = drain_workload(work, sms[-1], resident=True)
+    extra = drain_extras(stats)
+    extra["transfers"] = rt.TRANSFERS.snapshot()
+    emit(f"runtime_srv_resident_{n_launches}x_{sms[-1]}sm",
+         t_res * 1e6 / n_launches,
+         f"launches_per_s={n_launches / t_res:.2f};"
+         f"speedup_vs_seq={t_seq / t_res:.2f};"
+         f"vs_host_path={t_host / t_res:.2f}x;"
+         f"gmem_uploads={rt.TRANSFERS.gmem_uploads};"
+         f"gmem_syncs={rt.TRANSFERS.gmem_syncs}",
+         extra=extra)
 
 
 def bench_runtime_skewed(n_small=7, n_sm=2):
@@ -470,6 +533,7 @@ def smoke() -> None:
         emit(f"smoke_fig4_{name}", wall * 1e6,
              f"speedup={scal / simt:.2f}")
     sched_wallclock(n=64, repeats=1)
+    bench_fused_step(n=32, repeats=2)
     bench_runtime_throughput(n_launches=16, sms=(2,))
     bench_runtime_skewed()
     bench_runtime_longtail()
@@ -506,6 +570,7 @@ def main() -> None:
     table5_energy()
     table6_customize()
     sched_wallclock()
+    bench_fused_step()
     bench_runtime_throughput()
     bench_runtime_skewed()
     bench_runtime_longtail()

@@ -180,6 +180,19 @@ IS_GMEM[list(GMEM_OPS)] = True
 IS_SMEM = np.zeros(NUM_OPCODES, dtype=bool)
 IS_SMEM[list(SMEM_OPS)] = True
 
+
+def _table_mask(table: np.ndarray) -> int:
+    """Fold a <=31-entry bool opcode table into a scalar int bitmask, so
+    pipeline stages can test membership with ``(mask >> op) & 1`` — a
+    scalar constant, usable inside Pallas kernel bodies where captured
+    array constants are rejected (NUM_OPCODES=28 fits int32)."""
+    return int(sum(1 << i for i, v in enumerate(table) if v))
+
+
+WRITES_REG_MASK = _table_mask(WRITES_REG)
+IS_GMEM_MASK = _table_mask(IS_GMEM)
+IS_SMEM_MASK = _table_mask(IS_SMEM)
+
 WARP_SIZE = 32
 
 

@@ -34,6 +34,10 @@ Issue disciplines (``MachineConfig.execute_backend``):
   execute stage running either as pure jnp or as the Pallas ``simt_alu``
   VPU kernel.  Cycle counters still charge the seed's serialized-issue
   cost, so all paper timing results are unchanged.
+* ``"pallas_fused"`` — same discipline, but the whole
+  fetch/read/execute/write/control step runs as ONE Pallas kernel per
+  ``while_loop`` iteration (``pipeline/fused.py``), reusing the stage
+  functions so results stay bit-exact.
 * ``"reference"`` — the seed interpreter: one round-robin warp per
   iteration; the bit-exact oracle for the vectorized paths.
 """

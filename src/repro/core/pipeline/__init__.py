@@ -11,6 +11,10 @@ control unit — is one module per stage:
 * :mod:`write`        — register/predicate writeback, global/shared
   stores;
 * :mod:`control`      — warp stack, EXIT/BAR, next PC, counters;
+* :mod:`fused`        — the whole step as ONE Pallas kernel
+  (``execute_backend="pallas_fused"``): same stage functions traced
+  inside a single ``pallas_call`` so no intermediate (W, 32) arrays are
+  materialized between stages;
 * :mod:`reference`    — the seed one-warp-per-issue interpreter, kept as
   the equivalence oracle (``execute_backend="reference"``).
 
@@ -37,14 +41,15 @@ from .read import Operands, read_operands
 from .execute import EXECUTE_STAGE_BACKENDS, execute
 from .write import write_back
 from .control import control
+from .fused import fused_sm_step
 from .reference import issue_one_warp
 
 __all__ = [
     "EXECUTE_BACKENDS", "EXECUTE_STAGE_BACKENDS", "READY", "WAIT",
     "FINISHED", "Counters", "Decoded", "MachineConfig", "Operands",
-    "SMState", "sm_step", "issue_one_warp", "init_state", "run_block",
-    "run_block_body", "_run_block_jit", "_BITS", "_LANES", "_pack",
-    "_unpack",
+    "SMState", "sm_step", "fused_sm_step", "issue_one_warp", "init_state",
+    "run_block", "run_block_body", "_run_block_jit", "_BITS", "_LANES",
+    "_pack", "_unpack",
 ]
 
 
@@ -84,7 +89,8 @@ def run_block_body(cfg: MachineConfig, n_warps: int, code, block_dim,
         return jnp.any(st.wstate != FINISHED) & \
             (st.counters.cycles < cfg.max_cycles)
 
-    step = issue_one_warp if cfg.execute_backend == "reference" else sm_step
+    step = {"reference": issue_one_warp,
+            "pallas_fused": fused_sm_step}.get(cfg.execute_backend, sm_step)
     body = functools.partial(step, cfg, code, lut, block_dim_xy,
                              block_xy, grid_xy)
     st = jax.lax.while_loop(cond, body, st0)

@@ -87,15 +87,18 @@ def control(cfg: MachineConfig, st: SMState, dec: Decoded, ops: Operands):
                        jnp.where(is_bar, WAIT, dec.wstate))
 
     # ---- counters / cycle cost -------------------------------------------
-    is_gmem_t = jnp.asarray(isa.IS_GMEM)
-    is_smem_t = jnp.asarray(isa.IS_SMEM)
+    # scalar opcode bitmasks, not array table gathers: this stage is
+    # also traced inside the fused Pallas kernel (fused.py), which
+    # rejects captured array constants
+    is_gmem = ((jnp.int32(isa.IS_GMEM_MASK) >> dec.op) & 1) != 0
+    is_smem = ((jnp.int32(isa.IS_SMEM_MASK) >> dec.op) & 1) != 0
     cost = jnp.where(
         dec.issued,
         jnp.where(
             dec.exec_this,
             cfg.rows_per_warp
-            + jnp.where(is_gmem_t[dec.op], cfg.mem_latency_global, 0)
-            + jnp.where(is_smem_t[dec.op], cfg.mem_latency_shared, 0),
+            + jnp.where(is_gmem, cfg.mem_latency_global, 0)
+            + jnp.where(is_smem, cfg.mem_latency_shared, 0),
             1),                              # a TAKEN pop costs one cycle
         0)                                   # non-issued warps: idle
     c = st.counters

@@ -14,7 +14,7 @@ from typing import NamedTuple
 import jax.numpy as jnp
 
 from .. import isa
-from .state import MachineConfig, SMState, _LANES
+from .state import MachineConfig, SMState
 from .fetch_decode import Decoded
 
 
@@ -61,7 +61,10 @@ def read_operands(cfg: MachineConfig, lut: jnp.ndarray,
         else jnp.zeros_like(s1)
 
     # ---- special-register values for S2R -------------------------------
-    tid_flat = arange_w[:, None] * 32 + _LANES[None, :]  # (W, 32)
+    # lane iota built at trace time (Pallas kernel bodies reject
+    # captured array constants — fused.py traces this stage in-kernel)
+    lanes = jnp.arange(isa.WARP_SIZE, dtype=jnp.int32)
+    tid_flat = arange_w[:, None] * 32 + lanes[None, :]   # (W, 32)
     bdx, bdy = block_dim_xy[0], block_dim_xy[1]
     shape = (W, isa.WARP_SIZE)
     srs = jnp.stack([

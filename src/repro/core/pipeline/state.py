@@ -22,11 +22,15 @@ _LANES = jnp.arange(isa.WARP_SIZE, dtype=jnp.int32)
 _BITS = jnp.uint32(1) << jnp.arange(isa.WARP_SIZE, dtype=jnp.uint32)
 
 #: Execute-stage backends selectable via ``MachineConfig.execute_backend``:
-#:   ``"jnp"``       — all-warp pipeline, pure-jnp vector ALU (default);
-#:   ``"pallas"``    — all-warp pipeline, Pallas ``simt_alu`` VPU kernel;
-#:   ``"reference"`` — the seed one-warp-per-issue interpreter, kept as
-#:                     the equivalence oracle for the vectorized paths.
-EXECUTE_BACKENDS = ("jnp", "pallas", "reference")
+#:   ``"jnp"``          — all-warp pipeline, pure-jnp vector ALU (default);
+#:   ``"pallas"``       — all-warp pipeline, Pallas ``simt_alu`` VPU kernel
+#:                        for the execute stage only;
+#:   ``"pallas_fused"`` — the whole pipeline step (fetch/read/execute/
+#:                        write/control) as ONE Pallas kernel
+#:                        (:mod:`repro.core.pipeline.fused`);
+#:   ``"reference"``    — the seed one-warp-per-issue interpreter, kept
+#:                        as the equivalence oracle for the vector paths.
+EXECUTE_BACKENDS = ("jnp", "pallas", "pallas_fused", "reference")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -106,14 +110,21 @@ class SMState(NamedTuple):
 
 
 def _pack(mask_bool: jnp.ndarray) -> jnp.ndarray:
-    """(..., 32) bool lane mask -> (...,) uint32 bitmask."""
-    return jnp.sum(jnp.where(mask_bool, _BITS, jnp.uint32(0)), axis=-1)
+    """(..., 32) bool lane mask -> (...,) uint32 bitmask.
+
+    The bit-position vector is rebuilt at trace time (iota) instead of
+    referencing the module-level ``_BITS`` constant so this helper can
+    also be traced inside a Pallas kernel body, where captured array
+    constants are rejected (see :mod:`repro.core.pipeline.fused`).
+    """
+    bits = jnp.uint32(1) << jnp.arange(isa.WARP_SIZE, dtype=jnp.uint32)
+    return jnp.sum(jnp.where(mask_bool, bits, jnp.uint32(0)), axis=-1)
 
 
 def _unpack(mask_u32: jnp.ndarray) -> jnp.ndarray:
     """(...,) uint32 bitmask -> (..., 32) bool lane mask."""
-    return ((mask_u32[..., None] >> _LANES.astype(jnp.uint32))
-            & jnp.uint32(1)) != 0
+    lanes = jnp.arange(isa.WARP_SIZE, dtype=jnp.uint32)
+    return ((mask_u32[..., None] >> lanes) & jnp.uint32(1)) != 0
 
 
 def init_state(cfg: MachineConfig, n_warps: int, block_dim: int,

@@ -16,7 +16,7 @@ from typing import NamedTuple
 import jax.numpy as jnp
 
 from .. import isa
-from .state import MachineConfig, SMState, _LANES
+from .state import MachineConfig, SMState
 from .fetch_decode import Decoded
 from .read import Operands
 
@@ -35,13 +35,18 @@ def write_back(cfg: MachineConfig, st: SMState, dec: Decoded,
     G = st.gmem.shape[0] - 1
     arange_w = jnp.arange(W, dtype=jnp.int32)
 
-    # ---- register writeback (opcode-class table lookup, one gather) ----
-    has_dst = jnp.asarray(isa.WRITES_REG)[dec.op]        # (W,) bool
+    # lane iota + scalar opcode bitmask instead of module-level array
+    # constants: this stage is also traced inside the fused Pallas
+    # kernel, which rejects captured array constants (fused.py)
+    lanes = jnp.arange(isa.WARP_SIZE, dtype=jnp.int32)
+
+    # ---- register writeback (opcode-class bitmask test, per warp) ------
+    has_dst = ((jnp.int32(isa.WRITES_REG_MASK) >> dec.op) & 1) != 0
     wr = ops.exec_mask & has_dst[:, None]
     old_dcol = jnp.take_along_axis(st.regs, dec.dst[:, None, None],
                                    axis=2)[..., 0]
     new_dcol = jnp.where(wr, result, old_dcol)
-    regs = st.regs.at[arange_w[:, None], _LANES[None, :],
+    regs = st.regs.at[arange_w[:, None], lanes[None, :],
                       dec.dst[:, None]].set(new_dcol)
 
     # ---- predicate writeback -------------------------------------------
@@ -50,7 +55,7 @@ def write_back(cfg: MachineConfig, st: SMState, dec: Decoded,
                                    axis=2)[..., 0]
     new_pcol = jnp.where(ops.exec_mask & is_setp[:, None], nib_new,
                          old_pcol)
-    pred = st.pred.at[arange_w[:, None], _LANES[None, :],
+    pred = st.pred.at[arange_w[:, None], lanes[None, :],
                       dec.pdst[:, None]].set(new_pcol)
 
     # global / shared stores (inactive lanes write the sentinel word)

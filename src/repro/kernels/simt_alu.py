@@ -1,22 +1,30 @@
-"""Pallas TPU kernel for the SM execute stage (the SP array).
+"""Pallas kernel family for the SM datapath (the SP array).
 
 The hot loop of the soft-SIMT interpreter is the Execute stage: apply
 one decoded integer instruction across all (warp, lane) pairs under the
 active mask.  On the FPGA this is the array of scalar processors plus
 DSP multipliers; on TPU the natural mapping is a VPU-wide vectorized
 select-by-opcode over a (warps, lanes) tile resident in VMEM — the
-MXU is useless for 32-bit integer ALU work, so this is a VPU kernel.
+MXU is useless for 32-bit integer ALU work, so these are VPU kernels.
 
-The kernel evaluates a *batch* of decoded instructions (one per warp
-row) in one launch: operands are pre-gathered (the Read stage), the
-kernel applies the per-warp opcode lanes-wide, and returns results plus
-ISETP predicate nibbles.  Beyond the plain ALU ops it covers the
-operand-select instructions — ISET (guard-LUT bit), SELP (predicated
-select), S2R (special-register read) — whose selected operands arrive
-pre-evaluated as the ``cond`` / ``s2r`` lane inputs, so the full
-register-writing datapath minus the memory ports runs in one kernel.
-This is the execute backend the all-warp pipeline selects with
-``MachineConfig.execute_backend="pallas"``.
+Two kernels share one datapath (:func:`alu_datapath`):
+
+* :func:`simt_alu` — the execute-*stage* kernel: evaluates a batch of
+  decoded instructions (one per warp row) in one launch.  Operands are
+  pre-gathered (the Read stage), the kernel applies the per-warp opcode
+  lanes-wide, and returns results plus ISETP predicate nibbles.  Beyond
+  the plain ALU ops it covers the operand-select instructions — ISET
+  (guard-LUT bit), SELP (predicated select), S2R (special-register
+  read) — whose selected operands arrive pre-evaluated as the ``cond``
+  / ``s2r`` lane inputs.  This is the execute backend the all-warp
+  pipeline selects with ``MachineConfig.execute_backend="pallas"``.
+* the fused *step* kernel of :mod:`repro.core.pipeline.fused`
+  (``execute_backend="pallas_fused"``): the same datapath embedded in a
+  single Pallas kernel that also performs fetch/decode, operand gather,
+  write-set scatter and the per-warp scoreboard/PC update — the whole
+  pipeline step with no stage boundaries.  It imports
+  :func:`alu_datapath` so the select-by-opcode SP array exists exactly
+  once across the kernel family (ref.py stays the independent oracle).
 
 Customization axes (paper §4.2) are static kernel parameters:
 ``enable_mul`` removes the multiplier datapath (IMUL/IMAD produce 0,
@@ -41,18 +49,13 @@ LANE_TILE = 128     # pad 32 lanes to one full VPU row
 WARP_TILE = 8       # warps per block
 
 
-def _alu_kernel(op_ref, s1_ref, s2_ref, s3_ref, cond_ref, s2r_ref,
-                mask_ref, out_ref, nib_ref, *, enable_mul: bool,
-                num_read_operands: int):
-    """One block: (WARP_TILE, LANE_TILE) lanes, per-warp op."""
-    s1 = s1_ref[...]
-    s2 = s2_ref[...]
-    s3 = s3_ref[...]
-    cond = cond_ref[...] != 0
-    s2r = s2r_ref[...]
-    mask = mask_ref[...] != 0
-    op = op_ref[...]          # (WARP_TILE, 1) int32, broadcast over lanes
-
+def alu_datapath(op, s1, s2, s3, cond, s2r, mask, *, enable_mul: bool,
+                 num_read_operands: int):
+    """The select-by-opcode SP-array datapath, shared by the kernel
+    family.  ``op`` is an int32 array broadcastable against the lane
+    operands (``(W, 1)`` against ``(W, LANES)``); ``cond``/``mask`` are
+    bool.  Returns ``(result, isetp nibble)``, both zero outside
+    ``mask`` (the nibble additionally zero outside ISETP rows)."""
     sh = s2 & 31
     u1 = s1.astype(jnp.uint32)
     mul = (s1 * s2) if enable_mul else jnp.zeros_like(s1)
@@ -91,8 +94,19 @@ def _alu_kernel(op_ref, s1_ref, s2_ref, s3_ref, cond_ref, s2r_ref,
     f_o = (((s1 ^ s2) & (s1 ^ d)) < 0).astype(jnp.int32)
     nib = f_s | (f_z << 1) | (f_c << 2) | (f_o << 3)
 
-    out_ref[...] = jnp.where(mask, res, 0)
-    nib_ref[...] = jnp.where(mask & (op == isa.ISETP), nib, 0)
+    return (jnp.where(mask, res, 0),
+            jnp.where(mask & (op == isa.ISETP), nib, 0))
+
+
+def _alu_kernel(op_ref, s1_ref, s2_ref, s3_ref, cond_ref, s2r_ref,
+                mask_ref, out_ref, nib_ref, *, enable_mul: bool,
+                num_read_operands: int):
+    """One block: (WARP_TILE, LANE_TILE) lanes, per-warp op."""
+    out_ref[...], nib_ref[...] = alu_datapath(
+        op_ref[...],              # (WARP_TILE, 1), broadcast over lanes
+        s1_ref[...], s2_ref[...], s3_ref[...],
+        cond_ref[...] != 0, s2r_ref[...], mask_ref[...] != 0,
+        enable_mul=enable_mul, num_read_operands=num_read_operands)
 
 
 @functools.partial(jax.jit, static_argnames=("enable_mul",

@@ -180,15 +180,21 @@ def run_sequential_baseline(work) -> float:
 
 def drain_workload(work, n_sm: int, tenants: int = 4,
                    policy: str = "bucket",
-                   max_window_cycles: int = None):
+                   max_window_cycles: int = None,
+                   resident: bool = False):
     """Submit ``work`` to a fresh cold-cache server and drain it.
 
     Oracle-checks every ticket; returns ``(server, stats, wall_s)``.
+    ``resident=True`` turns on the device-resident gmem pool
+    (``RuntimeServer(resident_gmem=True)``): tenant memory is adopted
+    onto the device at submit and stays there across drain windows; the
+    oracle check below is then the first host read of each result.
     """
     import jax
     jax.clear_caches()
     srv = rt.RuntimeServer(n_sm=n_sm, policy=policy,
-                           max_window_cycles=max_window_cycles)
+                           max_window_cycles=max_window_cycles,
+                           resident_gmem=resident)
     tickets = {}
     t0 = time.perf_counter()
     for i, (name, mod, n, code, (grid, bd), g0) in enumerate(work):
@@ -198,8 +204,9 @@ def drain_workload(work, n_sm: int, tenants: int = 4,
     results, stats = srv.drain()
     wall = time.perf_counter() - t0
     for t, (mod, n, g0) in tickets.items():
-        np.testing.assert_array_equal(results[t].gmem[mod.out_slice(n)],
-                                      mod.oracle(g0, n))
+        np.testing.assert_array_equal(
+            np.asarray(results[t].gmem)[mod.out_slice(n)],
+            mod.oracle(g0, n))
     return srv, stats, wall
 
 
@@ -218,6 +225,12 @@ def print_stats(srv, stats, wall: float, n_sm: int, tenants: int) -> None:
     print(f"[serve] drain makespan {stats.makespan_cycles} cycles "
           f"(busy {stats.busy_cycles}, duration balance "
           f"{stats.duration_balance:.2f})")
+    if stats.pool is not None and srv.resident_gmem:
+        p = stats.pool
+        print(f"[serve] gmem pool: {p['entries']} resident "
+              f"({p['pinned']} pinned), {p['host_uploads']} uploads / "
+              f"{p['host_syncs']} syncs / {p['evictions']} evictions, "
+              f"{p['hits']} hits / {p['misses']} misses")
     for client in sorted(stats.by_tenant):
         ts = stats.by_tenant[client]
         print(f"[serve]   tenant {client}: {ts.launches} launches / "
@@ -253,6 +266,10 @@ def main(argv=None):
                     help="duration budget per drain window: stop "
                          "packing a window once its CostModel-predicted"
                          " cycles exceed this (bounds drain latency)")
+    ap.add_argument("--resident-gmem", action="store_true",
+                    help="keep tenant global memory device-resident "
+                         "across drain windows (GmemPool); host gmem "
+                         "crosses once at submit and once at read-back")
     args = ap.parse_args(argv)
 
     if args.skewed and args.longtail:
@@ -273,7 +290,8 @@ def main(argv=None):
 
     srv, stats, wall = drain_workload(work, args.n_sm, args.tenants,
                                       args.policy,
-                                      args.max_window_cycles)
+                                      args.max_window_cycles,
+                                      resident=args.resident_gmem)
     print_stats(srv, stats, wall, args.n_sm, args.tenants)
     if t_seq is not None:
         print(f"[serve] throughput vs sequential: {t_seq / wall:.2f}x")

@@ -10,7 +10,11 @@ resident machine handles many tenants' binaries back-to-back:
   the keys the drain policies schedule on; the registry's
   :class:`~repro.runtime.registry.CostModel` memoizes observed
   cycles/block per module (seeded from program length) so policies can
-  pack windows by predicted *duration*;
+  pack windows by predicted *duration*; the
+  :class:`~repro.runtime.registry.GmemPool` is the memory-side sibling:
+  a device-resident per-ticket gmem pool (the serving mode
+  ``RuntimeServer(resident_gmem=True)`` keeps tenant memory on device
+  across drain windows, synced to host only on explicit read/eviction);
 * :mod:`executor` — the multi-SM executor: blocks from one or more
   launches packed round-robin across ``n_sm`` SMs via a batched vmap
   axis, with per-SM cycle counters coming out of the executed schedule
@@ -35,11 +39,11 @@ exercises this path.
 """
 from .registry import (CODE_BUCKETS, GMEM_MIN_WORDS, SEED_CYCLES_PER_INSTR,
                        WARP_BUCKETS, CostEstimate, CostModel, Footprint,
-                       Module, ModuleRegistry, bucket_code_len,
+                       GmemPool, Module, ModuleRegistry, bucket_code_len,
                        bucket_gmem_len, bucket_warps, footprint, pad_code)
-from .executor import (BLOCK_SCHED_OVERHEAD, LAUNCH_BUCKETS, DeviceGrid,
-                       GridResult, LaunchSpec, MultiSMReport,
-                       bucket_launches, execute, run_grid)
+from .executor import (BLOCK_SCHED_OVERHEAD, LAUNCH_BUCKETS, TRANSFERS,
+                       DeviceGrid, GridResult, LaunchSpec, MultiSMReport,
+                       TransferLog, bucket_launches, execute, run_grid)
 from .stream import (Event, Launch, QueuedLaunch, QueuedStream, Runtime,
                      Stream)
 from .policy import (POLICIES, AdmissionError, BalancedDrain, BucketDrain,
@@ -51,11 +55,12 @@ __all__ = [
     "AdmissionError", "BLOCK_SCHED_OVERHEAD", "BalancedDrain",
     "BucketDrain", "BucketStats", "CODE_BUCKETS", "CostEstimate",
     "CostModel", "DepGmem", "DeviceGrid", "DrainPolicy", "DrainStats",
-    "Event", "FairBucketDrain", "Footprint", "GMEM_MIN_WORDS",
+    "Event", "FairBucketDrain", "Footprint", "GMEM_MIN_WORDS", "GmemPool",
     "GridResult", "Launch", "LaunchRequest", "LaunchSpec",
     "LAUNCH_BUCKETS", "MonolithicDrain", "Module", "ModuleRegistry",
     "MultiSMReport", "POLICIES", "QueuedLaunch", "QueuedStream", "Runtime",
-    "RuntimeServer", "SEED_CYCLES_PER_INSTR", "Stream", "TenantStats",
+    "RuntimeServer", "SEED_CYCLES_PER_INSTR", "Stream", "TRANSFERS",
+    "TenantStats", "TransferLog",
     "WARP_BUCKETS", "bucket_code_len", "bucket_gmem_len",
     "bucket_launches", "bucket_warps", "execute", "footprint",
     "make_policy", "pad_code", "run_grid",

@@ -45,6 +45,38 @@ from .registry import Module, ModuleRegistry
 # register-file id init — §3.1 "initializes registers ... with thread IDs").
 BLOCK_SCHED_OVERHEAD = 24
 
+
+class TransferLog:
+    """Counts host<->device crossings on the executor's hot path.
+
+    The resident-gmem serving mode promises *zero* host gmem round-trips
+    between the windows of a drain; this module-level log is the test
+    hook that proves it.  ``gmem_uploads`` counts host arrays padded
+    onto the device (:func:`_pad_gmem_device`), ``gmem_syncs`` counts
+    per-launch gmem materializations back to numpy
+    (:meth:`DeviceGrid.to_results` with ``host_gmem=True``), and
+    ``counter_syncs`` counts the one batched accounting fetch each
+    :class:`DeviceGrid` performs (:meth:`DeviceGrid._host_fetch`).
+    """
+
+    def __init__(self) -> None:
+        self.reset()
+
+    def reset(self) -> "TransferLog":
+        self.gmem_uploads = 0
+        self.gmem_syncs = 0
+        self.counter_syncs = 0
+        return self
+
+    def snapshot(self) -> dict:
+        return dict(gmem_uploads=self.gmem_uploads,
+                    gmem_syncs=self.gmem_syncs,
+                    counter_syncs=self.counter_syncs)
+
+
+#: Process-wide transfer counters (reset() in tests around a drain).
+TRANSFERS = TransferLog()
+
 #: Launch-batch-width buckets: a drain of L concurrent launches pads its
 #: per-launch arrays to the next bucket so the dispatch never retraces on
 #: the number of resident tenants.
@@ -56,7 +88,11 @@ def bucket_launches(n: int) -> int:
 
 
 class GridResult(NamedTuple):
-    """Per-launch result: final memory plus the paper's activity counters."""
+    """Per-launch result: final memory plus the paper's activity counters.
+
+    ``gmem`` is host numpy on the default path; under the resident
+    serving mode (``DeviceGrid.to_results(host_gmem=False)``) it is a
+    device array that never crossed to the host."""
     gmem: np.ndarray            # final global memory (original length)
     cycles_per_block: np.ndarray
     op_issues: np.ndarray       # (NUM_OPCODES,) int64, summed over blocks
@@ -191,6 +227,8 @@ def _run_positions(cfg: MachineConfig, n_warps: int, codes, bdims, bd_xys,
 
 def _pad_gmem_device(gmem, width: int) -> jnp.ndarray:
     """Pad one launch's global memory to its bucket, staying on device."""
+    if not isinstance(gmem, jax.Array):
+        TRANSFERS.gmem_uploads += 1          # host numpy crossing over
     g = jnp.asarray(gmem, jnp.int32)
     if g.shape[0] == width:
         return g
@@ -219,7 +257,8 @@ class DeviceGrid:
         self._blocks = list(launch_blocks)
         self._orig_lens = list(orig_lens)
         self._gmem_views: dict = {}
-        self._results: Optional[List[GridResult]] = None
+        self._host: Optional[tuple] = None
+        self._results: dict = {}
 
     @property
     def n_launches(self) -> int:
@@ -239,9 +278,21 @@ class DeviceGrid:
         jax.block_until_ready((self._gmems, self._sm_cyc))
         return self
 
+    def _host_fetch(self) -> tuple:
+        """All per-block counters plus per-SM cycles in ONE batched
+        device→host transfer, memoized.  ``report`` and ``to_results``
+        both draw from it, so a drain window costs exactly one
+        accounting sync instead of seven scattered ``np.asarray`` hops
+        (six counter leaves + the SM-cycle lanes)."""
+        if self._host is None:
+            TRANSFERS.counter_syncs += 1
+            self._host = jax.device_get((self._ctrs, self._sm_cyc))
+        return self._host
+
     def report(self) -> MultiSMReport:
-        """Executed per-SM cycle counters (host fetch)."""
-        hi_lo = np.asarray(self._sm_cyc, np.int64)
+        """Executed per-SM cycle counters (batched host fetch)."""
+        _, sm_cyc = self._host_fetch()
+        hi_lo = np.asarray(sm_cyc, np.int64)
         return MultiSMReport(
             n_sm=self.n_sm,
             per_sm_cycles=(hi_lo[0] << 16) + hi_lo[1],
@@ -250,11 +301,19 @@ class DeviceGrid:
             device_gmem_words=int(np.prod(self._gmems.shape)),
             useful_gmem_words=int(sum(self._orig_lens)))
 
-    def to_results(self) -> List[GridResult]:
-        """Materialize one :class:`GridResult` per launch (host sync)."""
-        if self._results is not None:
-            return self._results
-        c = self._ctrs
+    def to_results(self, host_gmem: bool = True) -> List[GridResult]:
+        """Materialize one :class:`GridResult` per launch.
+
+        Counters always come from the one batched accounting fetch
+        (:meth:`_host_fetch`).  With ``host_gmem=True`` (default) each
+        launch's final gmem is synced to numpy; ``host_gmem=False``
+        leaves the ``gmem`` fields as device arrays — the resident
+        serving mode, where memory only crosses to the host at an
+        explicit pool read/eviction.
+        """
+        if host_gmem in self._results:
+            return self._results[host_gmem]
+        c, _ = self._host_fetch()
         cycles = np.asarray(c.cycles, np.int64)
         op_issues = np.asarray(c.op_issues, np.int64)
         op_lanes = np.asarray(c.op_lanes, np.int64)
@@ -264,15 +323,20 @@ class DeviceGrid:
         out = []
         for i, (off, nb) in enumerate(zip(self._offsets, self._blocks)):
             sl = slice(off, off + nb)
+            if host_gmem:
+                TRANSFERS.gmem_syncs += 1
+                gmem_i = np.asarray(self.launch_gmem(i))
+            else:
+                gmem_i = self.launch_gmem(i)
             out.append(GridResult(
-                gmem=np.asarray(self.launch_gmem(i)),
+                gmem=gmem_i,
                 cycles_per_block=cycles[sl],
                 op_issues=op_issues[sl].sum(0),
                 op_lanes=op_lanes[sl].sum(0),
                 stack_ops=int(stack_ops[sl].sum()),
                 max_sp=int(max_sp[sl].max()) if nb else 0,
                 overflow=bool(overflow[sl].any())))
-        self._results = out
+        self._results[host_gmem] = out
         return out
 
 

@@ -26,6 +26,15 @@ module memoizes the cycles/block its completed drains *observed*,
 seeded by a static estimate from program length, so drain policies can
 pack sub-batch windows by predicted **duration** (not just footprint)
 — see :class:`repro.runtime.policy.BalancedDrain`.
+
+:class:`GmemPool` is the memory-side sibling of the binary cache: a
+device-resident per-ticket global-memory pool.  Where the registry
+keeps tenant *binaries* loaded once, the pool keeps tenant *memories*
+on device across drain windows — producers deposit their final gmem as
+device arrays, dependents consume them without a host round-trip, and
+host numpy is involved only at explicit :meth:`GmemPool.read` /
+:meth:`GmemPool.evict` boundaries (the overlay papers' point about
+keeping state resident as the machine scales).
 """
 from __future__ import annotations
 
@@ -213,6 +222,113 @@ class CostModel:
         """Drop a module's observations (paired with registry eviction)."""
         self._mean.pop(key, None)
         self._samples.pop(key, None)
+
+
+class GmemPool:
+    """Device-resident per-ticket global-memory pool (LRU, pinnable).
+
+    Generalizes the server's ``DepGmem`` stash: every entry is a device
+    array keyed by producer ticket.  Entries with still-queued
+    dependents are **pinned** (never evicted, reported by
+    :meth:`pinned`); unpinned entries are LRU-evicted beyond
+    ``max_entries``, with a host write-back sync (``host_syncs``) so an
+    evicted memory is never silently lost.  ``adopt`` is the single
+    host→device upload seam: a host array crosses once and is counted
+    (``host_uploads``); device arrays pass through untouched.  Hit/miss
+    counters make residency behaviour testable the same way the module
+    registry's do.
+    """
+
+    def __init__(self, max_entries: Optional[int] = None) -> None:
+        self.max_entries = max_entries
+        self._mem: Dict[int, object] = {}     # ticket -> device array
+        self._pins: Dict[int, bool] = {}      # ticket -> pinned?
+        self.hits = 0
+        self.misses = 0
+        self.host_uploads = 0
+        self.host_syncs = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._mem)
+
+    def __contains__(self, ticket: int) -> bool:
+        return ticket in self._mem
+
+    def adopt(self, gmem):
+        """Coerce launch memory to a device array, counting the upload
+        if it was host-side.  The one place host numpy crosses to the
+        device on the resident path."""
+        import jax
+        import jax.numpy as jnp
+        if isinstance(gmem, jax.Array):
+            return gmem
+        self.host_uploads += 1
+        return jnp.asarray(np.asarray(gmem, np.int32))
+
+    def put(self, ticket: int, gmem, pin: bool = False) -> None:
+        """Deposit a ticket's final gmem (device array stays on device)."""
+        self._mem.pop(ticket, None)           # LRU refresh on re-put
+        self._pins.pop(ticket, None)
+        self._mem[ticket] = self.adopt(gmem)
+        self._pins[ticket] = pin
+        if self.max_entries is not None:
+            unpinned = [t for t, p in self._pins.items() if not p]
+            while len(self._mem) > self.max_entries and unpinned:
+                self.evict(unpinned.pop(0))
+
+    def pin(self, ticket: int) -> None:
+        if ticket in self._pins:
+            self._pins[ticket] = True
+
+    def get(self, ticket: int):
+        """Device array for ``ticket`` (LRU-refreshed), or None."""
+        g = self._mem.get(ticket)
+        if g is None:
+            self.misses += 1
+            return None
+        self.hits += 1
+        self._mem.pop(ticket)
+        self._mem[ticket] = g                 # re-insert: dict order = LRU
+        return g
+
+    def read(self, ticket: int) -> Optional[np.ndarray]:
+        """Host copy of a resident entry (explicit device→host sync)."""
+        g = self._mem.get(ticket)
+        if g is None:
+            return None
+        self.host_syncs += 1
+        return np.asarray(g, np.int32)
+
+    def evict(self, ticket: int) -> Optional[np.ndarray]:
+        """Write back and drop one entry: syncs the device array to host
+        (the only other sync point besides :meth:`read`) and returns the
+        host copy; None if the ticket is not resident."""
+        g = self._mem.pop(ticket, None)
+        self._pins.pop(ticket, None)
+        if g is None:
+            return None
+        self.evictions += 1
+        self.host_syncs += 1
+        return np.asarray(g, np.int32)
+
+    def release(self, ticket: int) -> None:
+        """Drop an entry nobody will read again — no write-back sync."""
+        self._mem.pop(ticket, None)
+        self._pins.pop(ticket, None)
+
+    def pinned(self) -> Dict[int, object]:
+        """{ticket: device array} of pinned entries — the live DepGmem
+        stash view the server (and its tests) observe."""
+        return {t: self._mem[t] for t, p in self._pins.items() if p}
+
+    def stats(self) -> Dict[str, int]:
+        return dict(entries=len(self._mem),
+                    pinned=sum(1 for p in self._pins.values() if p),
+                    hits=self.hits, misses=self.misses,
+                    host_uploads=self.host_uploads,
+                    host_syncs=self.host_syncs,
+                    evictions=self.evictions)
 
 
 class ModuleRegistry:

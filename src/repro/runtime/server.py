@@ -40,7 +40,7 @@ from ..core.pipeline import MachineConfig
 from . import executor as ex
 from . import policy as pol
 from .policy import AdmissionError, BucketStats, DrainPolicy, TenantStats
-from .registry import ModuleRegistry
+from .registry import GmemPool, ModuleRegistry
 from .stream import QueuedLaunch, QueuedStream
 
 
@@ -91,6 +91,7 @@ class DrainStats(NamedTuple):
     by_bucket: Optional[Dict[int, BucketStats]] = None
     makespan_cycles: int = 0     # sum over sub-batches of busiest-SM cycles
     busy_cycles: int = 0         # sum over sub-batches and SMs of real work
+    pool: Optional[Dict[str, int]] = None   # GmemPool.stats() snapshot
 
     @property
     def duration_balance(self) -> float:
@@ -120,7 +121,9 @@ class RuntimeServer:
                  policy: Union[str, DrainPolicy, None] = None,
                  max_pending: Optional[int] = 1024,
                  max_inflight_per_tenant: Optional[int] = 256,
-                 max_window_cycles: Optional[int] = None):
+                 max_window_cycles: Optional[int] = None,
+                 resident_gmem: bool = False,
+                 gmem_pool_entries: Optional[int] = None):
         self.n_sm = n_sm
         self.cfg = cfg
         # default: one SM-wide super-step per dispatch — small groups
@@ -145,13 +148,25 @@ class RuntimeServer:
         # raised survive here until the next drain redeems them
         self._completed: Dict[int, ex.GridResult] = {}
         self._futures: Dict[int, QueuedLaunch] = {}
+        #: device residency: with ``resident_gmem=True`` tenant global
+        #: memory lives on device end to end — submit uploads host
+        #: arrays once (``gmem_pool.adopt``), drain materializes results
+        #: with device gmem (``to_results(host_gmem=False)``), and the
+        #: stashed producer memories dependents consume between windows
+        #: and drains stay device arrays in the pool.  Host numpy is
+        #: involved only at an explicit ``gmem_pool.read``/``evict`` or
+        #: a caller's own ``np.asarray`` on a result.
+        self.resident_gmem = resident_gmem
+        #: per-ticket device gmem pool; also the unified DepGmem stash
+        #: (pinned entries = producer memories with queued dependents)
+        self.gmem_pool = GmemPool(max_entries=gmem_pool_entries)
         # dependency bookkeeping: how many still-queued dependents wait
         # on each producer ticket, completed producer memories kept
-        # alive until the last dependent consumed them, and producers
+        # alive until the last dependent consumed them (pinned in the
+        # gmem pool — see the ``_dep_gmem`` view), and producers
         # dropped while dependents were still waiting (those dependents
         # must fail, not requeue forever)
         self._dep_waiters: Dict[int, int] = {}
-        self._dep_gmem: Dict[int, np.ndarray] = {}
         self._dep_dropped: set = set()
         self._next_ticket = 0
         self.drains = 0
@@ -159,6 +174,15 @@ class RuntimeServer:
         #: cumulative accounting across all drains
         self.tenant_stats: Dict[str, TenantStats] = {}
         self.bucket_stats: Dict[int, BucketStats] = {}
+
+    @property
+    def _dep_gmem(self) -> Dict[int, object]:
+        """Live DepGmem-stash view: the gmem pool's pinned entries.
+
+        Kept as a property (not a second dict) so the stash and the
+        resident pool cannot drift — tests assert on it to check the
+        dependency bookkeeping fully unwinds."""
+        return self.gmem_pool.pinned()
 
     # ------------------------------------------------------------ admission
 
@@ -190,6 +214,10 @@ class RuntimeServer:
         caller-supplied DepGmems)."""
         if fut._server is self and not fut.done():
             return DepGmem(fut.ticket, 0)
+        if self.resident_gmem:
+            # resolved memory stays on device (pool-adopt is a no-op for
+            # device arrays; a foreign host array uploads exactly once)
+            return self.gmem_pool.adopt(fut.gmem())
         return np.asarray(fut.gmem(), np.int32)
 
     def submit(self, code, grid, block_dim, gmem,
@@ -239,6 +267,10 @@ class RuntimeServer:
             if gmem.ndim != 1:
                 raise ValueError(
                     f"gmem must be 1-D, got shape {gmem.shape}")
+            if self.resident_gmem:
+                # upload once at the door; every window of every drain
+                # then sees a device array (zero per-window rebuilds)
+                gmem = self.gmem_pool.adopt(gmem)
         self._admit(client)
         mod = self.registry.as_module(code)
         ticket = self._next_ticket
@@ -391,10 +423,15 @@ class RuntimeServer:
     def _dep_lookup(self, ticket: int,
                     results: Dict[int, ex.GridResult]):
         """A completed producer's final gmem, from this drain's results
-        or the cross-drain stash; None while the producer hasn't run."""
+        or the cross-drain pool stash; None while the producer hasn't
+        run.  A device-resident result passes through as-is — the
+        zero-host-hop edge between a multi-window drain's windows."""
         if ticket in results:
-            return np.asarray(results[ticket].gmem, np.int32)
-        return self._dep_gmem.get(ticket)
+            g = results[ticket].gmem
+            if isinstance(g, np.ndarray):
+                return np.asarray(g, np.int32)
+            return g                        # device array: stays resident
+        return self.gmem_pool.get(ticket)
 
     def _dep_done(self, ticket: int) -> None:
         """One dependent of ``ticket`` finished (or was dropped): free
@@ -404,7 +441,7 @@ class RuntimeServer:
             self._dep_waiters[ticket] = n
         else:
             self._dep_waiters.pop(ticket, None)
-            self._dep_gmem.pop(ticket, None)
+            self.gmem_pool.release(ticket)
             self._dep_dropped.discard(ticket)
 
     def _drop(self, r: LaunchRequest, error: BaseException,
@@ -515,7 +552,8 @@ class RuntimeServer:
         if not self._pending and not self._completed:
             return {}, DrainStats(0, 0, self.n_sm, 0.0, 0.0,
                                   np.zeros(self.n_sm, np.int64), 0,
-                                  by_tenant={}, by_bucket={})
+                                  by_tenant={}, by_bucket={},
+                                  pool=self.gmem_pool.stats())
         t0 = time.perf_counter()
         # redeem sub-batches completed before a previous drain() raised
         results, self._completed = self._completed, {}
@@ -565,7 +603,8 @@ class RuntimeServer:
                                     chunk=self.chunk,
                                     pad_warps=sb.pad_warps,
                                     registry=self.registry)
-                    sub_results = dg.to_results()
+                    sub_results = dg.to_results(
+                        host_gmem=not self.resident_gmem)
                 except Exception as e:
                     # isolate the failure to this sub-batch: window-mates
                     # in other sub-batches still complete; this group's
@@ -592,8 +631,9 @@ class RuntimeServer:
                     self.registry.cost_model.observe(
                         req.spec.code, res.cycles_per_block)
                     if req.ticket in self._dep_waiters:
-                        self._dep_gmem[req.ticket] = \
-                            np.asarray(res.gmem, np.int32)
+                        # pinned pool deposit: device arrays stay on
+                        # device; host results upload once at stash time
+                        self.gmem_pool.put(req.ticket, res.gmem, pin=True)
                     for d in req.deps:
                         self._dep_done(d)
                     fut = self._futures.pop(req.ticket, None)
@@ -627,5 +667,6 @@ class RuntimeServer:
             useful_gmem_words=useful_words, padded_gmem_words=padded_words,
             occupancy=n_blocks / sm_slots if sm_slots else 0.0,
             by_tenant=by_tenant, by_bucket=by_bucket,
-            makespan_cycles=makespan, busy_cycles=busy)
+            makespan_cycles=makespan, busy_cycles=busy,
+            pool=self.gmem_pool.stats())
         return results, stats

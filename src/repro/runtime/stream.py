@@ -239,7 +239,12 @@ class QueuedLaunch:
         return self._result
 
     def gmem(self) -> jnp.ndarray:
-        """Final global memory (resolves the future first)."""
+        """Final global memory (resolves the future first).
+
+        On a ``resident_gmem`` server the result's memory is already a
+        device array and passes through with no host round-trip — so
+        chaining a new launch on a resolved future stays device-side
+        end to end."""
         return jnp.asarray(self.result().gmem, jnp.int32)
 
     def wait(self) -> "QueuedLaunch":

@@ -50,6 +50,23 @@ def test_compiled_kernel_matches_oracle_across_sizes(name):
 
 
 @pytest.mark.parametrize("name", sorted(COMPILED))
+def test_compiled_kernel_fused_backend_bit_exact(name):
+    """The single-kernel ``pallas_fused`` step path reproduces the jnp
+    backend bit-for-bit on every DSL-compiled kernel (gmem, per-block
+    cycles, per-opcode issue/lane counters)."""
+    from repro.core.machine import MachineConfig
+    mod = COMPILED[name]
+    n = SIZES[name][1]
+    code = mod.build(n)
+    g0 = mod.make_gmem(np.random.default_rng(5), n)
+    res = {}
+    for be in ("jnp", "pallas_fused"):
+        cfg = MachineConfig(execute_backend=be)
+        res[be] = scheduler.run_grid(code, *mod.launch(n), g0.copy(), cfg)
+    _assert_bit_identical(res["pallas_fused"], res["jnp"])
+
+
+@pytest.mark.parametrize("name", sorted(COMPILED))
 def test_naive_and_optimized_binaries_agree(name):
     """Passes change instructions, never results: the passes-disabled
     binary produces identical global memory."""

@@ -1,0 +1,241 @@
+"""Device-resident gmem pool: lifecycle, transfer accounting, server
+residency.
+
+The acceptance bar for ``RuntimeServer(resident_gmem=True)``: tenant
+global memory stays on device across drain windows — **zero** host gmem
+round-trips between the windows of a multi-window drain (asserted via
+the :data:`repro.runtime.TRANSFERS` counting hook) — and the results
+are bit-identical to the host-round-trip path.  The pool itself is
+exercised directly for LRU/pin/evict/write-back semantics.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+import repro.runtime as rt
+from repro.core import asm, isa
+
+
+# --------------------------------------------------------------- helpers
+
+def _addk(k, pad_to=64):
+    """out[tid] = gmem[tid] + k for tid in [0, block_dim)."""
+    p = asm.Program(f"addk{k}")
+    p.s2r("r0", isa.SR_TID)
+    p.ldg("r1", "r0", 0)
+    p.iadd("r1", "r1", k)
+    p.stg("r0", "r1", 0)
+    p.exit()
+    return p.finish(pad_to=pad_to)
+
+
+def _chain(srv, g0, ks, client="t"):
+    """Queue a dependent chain of addk launches on one stream."""
+    s = srv.stream(g0, client=client)
+    futs = []
+    for i, k in enumerate(ks):
+        mod = srv.registry.load(_addk(k), f"{client}-addk{k}-{i}")
+        futs.append(s.launch(mod, (1, 1), (32, 1)))
+    return futs
+
+
+# ------------------------------------------------------- GmemPool (unit)
+
+def test_pool_adopt_counts_host_uploads_once():
+    pool = rt.GmemPool()
+    host = np.arange(8, dtype=np.int32)
+    dev = pool.adopt(host)
+    assert isinstance(dev, jax.Array)
+    assert pool.host_uploads == 1
+    # device arrays pass through with no second upload
+    assert pool.adopt(dev) is dev
+    assert pool.host_uploads == 1
+
+
+def test_pool_put_get_read_release():
+    pool = rt.GmemPool()
+    g = np.arange(16, dtype=np.int32)
+    pool.put(7, g)
+    assert 7 in pool and len(pool) == 1
+    got = pool.get(7)
+    assert isinstance(got, jax.Array)
+    assert pool.hits == 1 and pool.misses == 0
+    assert pool.get(99) is None and pool.misses == 1
+    # read = explicit device->host sync, entry stays resident
+    host = pool.read(7)
+    np.testing.assert_array_equal(host, g)
+    assert pool.host_syncs == 1 and 7 in pool
+    # release drops with NO write-back sync
+    pool.release(7)
+    assert 7 not in pool and pool.host_syncs == 1
+
+
+def test_pool_evict_writes_back():
+    pool = rt.GmemPool()
+    g = np.arange(32, dtype=np.int32) * 3
+    pool.put(1, jnp.asarray(g))
+    back = pool.evict(1)
+    assert isinstance(back, np.ndarray)
+    np.testing.assert_array_equal(back, g)
+    assert pool.evictions == 1 and pool.host_syncs == 1
+    assert 1 not in pool
+    assert pool.evict(1) is None          # second evict: not resident
+
+
+def test_pool_lru_cap_respects_pins():
+    pool = rt.GmemPool(max_entries=2)
+    pool.put(1, np.full(4, 1, np.int32), pin=True)
+    pool.put(2, np.full(4, 2, np.int32))
+    pool.put(3, np.full(4, 3, np.int32))
+    # cap 2: oldest UNPINNED entry (2) evicted, pinned 1 survives
+    assert 1 in pool and 3 in pool and 2 not in pool
+    assert pool.evictions == 1
+    assert set(pool.pinned()) == {1}
+    # touching 3 then inserting 4 evicts nothing pinned
+    pool.get(3)
+    pool.put(4, np.full(4, 4, np.int32))
+    assert 1 in pool and 4 in pool and 3 not in pool
+    stats = pool.stats()
+    assert stats["entries"] == 2 and stats["pinned"] == 1
+    assert stats["evictions"] == 2
+
+
+# ------------------------------------------- executor transfer batching
+
+def test_device_grid_single_counter_sync_per_window():
+    """report() + to_results() share ONE batched device->host fetch."""
+    code = _addk(5)
+    g0 = np.arange(64, dtype=np.int32)
+    rt.TRANSFERS.reset()
+    dg = rt.execute([rt.LaunchSpec(code, (1, 1), (32, 1), g0)], n_sm=2)
+    dg.report()
+    res = dg.to_results()[0]
+    assert rt.TRANSFERS.counter_syncs == 1
+    assert rt.TRANSFERS.gmem_syncs == 1   # one host materialization
+    want = g0.copy()
+    want[:32] += 5
+    np.testing.assert_array_equal(res.gmem, want)
+
+
+def test_to_results_device_gmem_stays_on_device():
+    code = _addk(2)
+    g0 = np.arange(64, dtype=np.int32)
+    rt.TRANSFERS.reset()
+    dg = rt.execute([rt.LaunchSpec(code, (1, 1), (32, 1), g0)], n_sm=1)
+    res = dg.to_results(host_gmem=False)[0]
+    assert isinstance(res.gmem, jax.Array)
+    assert rt.TRANSFERS.gmem_syncs == 0
+
+
+# ------------------------------------------------- server residency
+
+def test_resident_drain_zero_host_gmem_roundtrips():
+    """The acceptance criterion: a 3-window dependent drain under
+    ``resident_gmem=True`` moves gmem host->device zero times and
+    device->host zero times between windows."""
+    g0 = np.arange(64, dtype=np.int32)
+    srv = rt.RuntimeServer(n_sm=2, resident_gmem=True, max_batch=1)
+    futs = _chain(srv, g0, (1, 2, 3))
+    rt.TRANSFERS.reset()
+    _, stats = srv.drain()
+    assert stats.n_windows == 3           # max_batch=1 -> 3 windows
+    assert rt.TRANSFERS.gmem_uploads == 0
+    assert rt.TRANSFERS.gmem_syncs == 0
+    want = g0.copy()
+    want[:32] += 6
+    np.testing.assert_array_equal(np.asarray(futs[-1].gmem()), want)
+    # pool fully unwound once the chain has no more dependents
+    assert srv._dep_waiters == {} and srv._dep_gmem == {}
+    assert stats.pool["host_syncs"] == 0
+
+
+def test_non_resident_drain_round_trips_every_window():
+    """Control: the default path uploads and syncs once per window."""
+    g0 = np.arange(64, dtype=np.int32)
+    srv = rt.RuntimeServer(n_sm=2, resident_gmem=False, max_batch=1)
+    futs = _chain(srv, g0, (1, 2, 3))
+    rt.TRANSFERS.reset()
+    _, stats = srv.drain()
+    assert stats.n_windows == 3
+    assert rt.TRANSFERS.gmem_uploads == 3
+    assert rt.TRANSFERS.gmem_syncs == 3
+    want = g0.copy()
+    want[:32] += 6
+    np.testing.assert_array_equal(np.asarray(futs[-1].gmem()), want)
+
+
+@pytest.mark.parametrize("max_batch", (1, 8))
+def test_resident_matches_host_path_bit_exact(max_batch):
+    """Same dependent chains, resident vs host round-trip: final gmem
+    and per-launch counters identical."""
+    g0 = np.arange(64, dtype=np.int32) - 17
+    outs = {}
+    for resident in (False, True):
+        srv = rt.RuntimeServer(n_sm=2, resident_gmem=resident,
+                               max_batch=max_batch)
+        fa = _chain(srv, g0, (3, 5, 7), client="a")
+        fb = _chain(srv, g0, (11, 13), client="b")
+        srv.drain()
+        outs[resident] = [
+            (np.asarray(f.gmem()),
+             np.asarray(f.result().cycles_per_block),
+             np.asarray(f.result().op_issues))
+            for f in fa + fb]
+    for host_out, res_out in zip(outs[False], outs[True]):
+        for g_host, g_res in zip(host_out, res_out):
+            np.testing.assert_array_equal(g_host, g_res)
+
+
+def test_resident_depgmem_explicit_chain_bit_exact():
+    """Caller-constructed DepGmem edges (submit with DepGmem, not a
+    stream) behave identically under residency."""
+    g0 = np.arange(64, dtype=np.int32)
+    outs = {}
+    for resident in (False, True):
+        srv = rt.RuntimeServer(n_sm=2, resident_gmem=resident,
+                               max_batch=1)
+        a = srv.submit_future(_addk(1), (1, 1), (32, 1), g0, client="t")
+        b = srv.submit_future(_addk(2), (1, 1), (32, 1),
+                              rt.DepGmem(a.ticket, 64), client="t")
+        srv.drain()
+        outs[resident] = np.asarray(b.gmem())
+    np.testing.assert_array_equal(outs[False], outs[True])
+    want = g0.copy()
+    want[:32] += 3
+    np.testing.assert_array_equal(outs[True], want)
+
+
+def test_resident_pool_survives_across_drains():
+    """A producer whose dependent is submitted AFTER a drain: the stash
+    stays pinned on device between drain() calls and is consumed, not
+    re-uploaded, by the second drain."""
+    g0 = np.arange(64, dtype=np.int32)
+    srv = rt.RuntimeServer(n_sm=2, resident_gmem=True, max_batch=1)
+    a = srv.submit_future(_addk(4), (1, 1), (32, 1), g0, client="t")
+    b = srv.submit_future(_addk(5), (1, 1), (32, 1),
+                          rt.DepGmem(a.ticket, 64), client="t")
+    c = srv.submit_future(_addk(6), (1, 1), (32, 1),
+                          rt.DepGmem(b.ticket, 64), client="t")
+    srv.drain(max_windows=1)              # resolves a (b, c still queued)
+    assert a.done() and not b.done()
+    assert set(srv._dep_gmem) == {a.ticket}
+    assert isinstance(srv._dep_gmem[a.ticket], jax.Array)
+    rt.TRANSFERS.reset()
+    srv.drain()
+    assert rt.TRANSFERS.gmem_uploads == 0
+    want = g0.copy()
+    want[:32] += 15
+    np.testing.assert_array_equal(np.asarray(c.gmem()), want)
+    assert srv._dep_gmem == {}
+
+
+def test_drain_stats_carry_pool_telemetry():
+    srv = rt.RuntimeServer(n_sm=1, resident_gmem=True)
+    _chain(srv, np.zeros(64, np.int32), (1,))
+    _, stats = srv.drain()
+    assert stats.pool is not None
+    for key in ("entries", "pinned", "hits", "misses", "host_uploads",
+                "host_syncs", "evictions"):
+        assert key in stats.pool

@@ -13,6 +13,11 @@ A seeded random-program sweep (mirroring the hypothesis strategies in
 test_machine.py, but deterministic so it runs without the optional
 dependency) additionally pins both issue disciplines to the pure-numpy
 ``RefMachine`` oracle.
+
+``pallas_fused`` — the single-kernel fast path that runs the whole
+fetch/read/execute/write/control step inside one Pallas kernel — is
+swept alongside the per-stage backends and held to the identical
+bit-exactness bar.
 """
 import numpy as np
 import pytest
@@ -22,7 +27,7 @@ from repro.core.machine import MachineConfig
 from repro.core.microblaze import RefMachine
 from repro.core.programs import ALL
 
-VEC_BACKENDS = ("jnp", "pallas")
+VEC_BACKENDS = ("jnp", "pallas", "pallas_fused")
 
 # divergent and barrier-heavy architectural variants (§4 axes)
 CONFIGS = {
@@ -89,17 +94,21 @@ def test_paper_program_grid_equivalence(name, rng):
     g0 = mod.make_gmem(rng, n)
     grid, bd = mod.launch(n)
     res = {}
-    for be in ("reference", "jnp"):
+    for be in ("reference", "jnp", "pallas_fused"):
         cfg = MachineConfig(execute_backend=be)
         res[be] = scheduler.run_grid(code, grid, bd, g0.copy(), cfg)
-    ref, vec = res["reference"], res["jnp"]
-    np.testing.assert_array_equal(ref.gmem, vec.gmem)
-    np.testing.assert_array_equal(ref.cycles_per_block,
-                                  vec.cycles_per_block)
-    np.testing.assert_array_equal(ref.op_issues, vec.op_issues)
-    np.testing.assert_array_equal(ref.op_lanes, vec.op_lanes)
-    assert ref.stack_ops == vec.stack_ops
-    assert ref.max_sp == vec.max_sp
+    ref = res["reference"]
+    for be in ("jnp", "pallas_fused"):
+        vec = res[be]
+        np.testing.assert_array_equal(ref.gmem, vec.gmem, err_msg=be)
+        np.testing.assert_array_equal(ref.cycles_per_block,
+                                      vec.cycles_per_block, err_msg=be)
+        np.testing.assert_array_equal(ref.op_issues, vec.op_issues,
+                                      err_msg=be)
+        np.testing.assert_array_equal(ref.op_lanes, vec.op_lanes,
+                                      err_msg=be)
+        assert ref.stack_ops == vec.stack_ops, be
+        assert ref.max_sp == vec.max_sp, be
 
 
 # --------------------------------------------------------------------------
