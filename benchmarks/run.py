@@ -109,6 +109,30 @@ def drain_extras(stats):
     return out
 
 
+def latency_extras(srv):
+    """Per-launch latency percentiles (µs, exact over the drain's
+    retained samples) and per-bucket jit compile attribution from the
+    server's metrics registry — the ``latency_p50/p90/p99`` +
+    ``jit`` keys every ``runtime_*`` BENCH row carries (schema:
+    docs/observability.md)."""
+    out = {}
+    hist = srv.metrics.histogram("server.latency_s")
+    if hist.count:
+        out["latency_p50"] = round(hist.percentile(50) * 1e6, 1)
+        out["latency_p90"] = round(hist.percentile(90) * 1e6, 1)
+        out["latency_p99"] = round(hist.percentile(99) * 1e6, 1)
+        qw = srv.metrics.histogram("server.queue_wait_s")
+        if qw.count:
+            out["queue_wait_p50"] = round(qw.percentile(50) * 1e6, 1)
+        dv = srv.metrics.histogram("server.device_s")
+        if dv.count:
+            out["device_p50"] = round(dv.percentile(50) * 1e6, 1)
+    jit = getattr(srv, "jit_attribution", None)
+    if jit:
+        out["jit"] = jit
+    return out
+
+
 def table2_area():
     """Area scaling with SP count and SM count (state-bit proxy)."""
     for n_sm in (1, 2):
@@ -345,25 +369,25 @@ def bench_runtime_throughput(n_launches=16, sms=(1, 2, 4)):
              f"launches_per_s={n_launches / t_srv:.2f};"
              f"speedup_vs_seq={t_seq / t_srv:.2f};"
              f"batch_kernel_cycles={int(stats.per_sm_cycles.max())}",
-             extra=drain_extras(stats))
+             extra={**drain_extras(stats), **latency_extras(srv)})
 
     # device-resident gmem pool at the last SM count: the same drain
     # with tenant memory adopted once at submit and never rebuilt on the
-    # host between windows (PR 6).  The extra records the TRANSFERS
-    # counting hook so the BENCH point shows the host round-trips the
-    # pool removed alongside the wall-clock delta.
+    # host between windows (PR 6).  The extra records a scoped
+    # TRANSFERS window so the BENCH point shows the host round-trips
+    # the pool removed alongside the wall-clock delta.
     import repro.runtime as rt
-    rt.TRANSFERS.reset()
+    transfers = rt.TRANSFERS.window()
     srv, stats, t_res = drain_workload(work, sms[-1], resident=True)
-    extra = drain_extras(stats)
-    extra["transfers"] = rt.TRANSFERS.snapshot()
+    extra = {**drain_extras(stats), **latency_extras(srv)}
+    extra["transfers"] = transfers.snapshot()
     emit(f"runtime_srv_resident_{n_launches}x_{sms[-1]}sm",
          t_res * 1e6 / n_launches,
          f"launches_per_s={n_launches / t_res:.2f};"
          f"speedup_vs_seq={t_seq / t_res:.2f};"
          f"vs_host_path={t_host / t_res:.2f}x;"
-         f"gmem_uploads={rt.TRANSFERS.gmem_uploads};"
-         f"gmem_syncs={rt.TRANSFERS.gmem_syncs}",
+         f"gmem_uploads={transfers.gmem_uploads};"
+         f"gmem_syncs={transfers.gmem_syncs}",
          extra=extra)
 
 
@@ -392,7 +416,7 @@ def bench_runtime_skewed(n_small=7, n_sm=2):
              f"useful_words={stats.useful_gmem_words};"
              f"sub_batches={stats.n_sub_batches};"
              f"occupancy={stats.occupancy:.2f}",
-             extra=drain_extras(stats))
+             extra={**drain_extras(stats), **latency_extras(srv)})
     emit(f"runtime_skew_reduction_{len(work)}x_{n_sm}sm", 0.0,
          f"padded_words_reduction="
          f"{padded['monolithic'] / max(padded['bucket'], 1):.1f}x")
@@ -426,7 +450,7 @@ def bench_runtime_longtail(n_launches=8, n_sm=2):
              f"busy_cycles={stats.busy_cycles};"
              f"duration_balance={stats.duration_balance:.2f};"
              f"sub_batches={stats.n_sub_batches}",
-             extra=drain_extras(stats))
+             extra={**drain_extras(stats), **latency_extras(srv)})
     emit(f"runtime_longtail_reduction_{len(work)}x_{n_sm}sm", 0.0,
          f"makespan_reduction="
          f"{makespan['bucket'] / max(makespan['balanced'], 1):.2f}x")
@@ -456,7 +480,7 @@ def bench_runtime_mixed_compiled(n_launches=16, n_sm=2):
              f"n_buckets={len(stats.by_bucket)};"
              f"sub_batches={stats.n_sub_batches};"
              f"occupancy={stats.occupancy:.2f}",
-             extra=drain_extras(stats))
+             extra={**drain_extras(stats), **latency_extras(srv)})
 
 
 def bench_compiler():
@@ -539,6 +563,28 @@ def smoke() -> None:
     bench_runtime_longtail()
     bench_runtime_mixed_compiled()
     bench_compiler()
+    _check_latency_rows()
+
+
+def _check_latency_rows() -> None:
+    """Pin the observability contract on the smoke trajectory point:
+    every server-drain row must carry present-and-finite latency
+    percentiles (p50 <= p90 <= p99) — a NaN or missing quantile here
+    means a regression in the metrics plumbing, caught in CI before it
+    reaches a real BENCH sweep."""
+    import math
+    rows = [r for r in _ROWS if "latency_p50" in r.get("extra", {})]
+    assert rows, "no BENCH rows carry latency percentiles"
+    for r in rows:
+        e = r["extra"]
+        p50, p90, p99 = (e["latency_p50"], e["latency_p90"],
+                         e["latency_p99"])
+        for k, v in (("p50", p50), ("p90", p90), ("p99", p99)):
+            assert isinstance(v, float) and math.isfinite(v) and v >= 0, \
+                (r["name"], k, v)
+        assert p50 <= p90 <= p99, (r["name"], p50, p90, p99)
+    print(f"# latency percentiles present and finite on "
+          f"{len(rows)} rows", flush=True)
 
 
 def _write_json() -> None:

@@ -32,6 +32,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from ...obs import jit_call
 from .. import isa
 from .state import (EXECUTE_BACKENDS, FINISHED, READY, WAIT, Counters,
                     MachineConfig, SMState, _BITS, _LANES, _pack, _unpack,
@@ -116,9 +117,14 @@ def run_block(code, block_dim: int, block_xy, grid_xy, gmem,
         bdx, bdy = block_dim
     else:
         bdx, bdy = block_dim, 1
-    return _run_block_jit(
-        cfg, jnp.asarray(code, jnp.int32), bdx * bdy,
-        jnp.asarray([bdx, bdy], jnp.int32),
-        jnp.asarray(block_xy, jnp.int32),
-        jnp.asarray(grid_xy, jnp.int32),
-        jnp.asarray(gmem, jnp.int32))
+    code = jnp.asarray(code, jnp.int32)
+    gmem = jnp.asarray(gmem, jnp.int32)
+    bucket = f"c{code.shape[0]}g{gmem.shape[0]}b{bdx * bdy}"
+    with jit_call("pipeline.run_block", _run_block_jit, bucket=bucket,
+                  key=(cfg, code.shape, bdx * bdy, gmem.shape)):
+        return _run_block_jit(
+            cfg, code, bdx * bdy,
+            jnp.asarray([bdx, bdy], jnp.int32),
+            jnp.asarray(block_xy, jnp.int32),
+            jnp.asarray(grid_xy, jnp.int32),
+            gmem)

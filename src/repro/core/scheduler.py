@@ -25,6 +25,10 @@ minimize per drain window — see ``docs/runtime-tuning.md``.
 The same blocks→SMs round-robin map reappears at cluster scale as the
 data-parallel shard assignment in :mod:`repro.launch.mesh` — the paper's
 scheduling idea lifted from SMs to chips (DESIGN.md §4).
+
+Execution through this facade is observable like the rest of the
+runtime: dispatches emit ``device-execute`` spans and jit compile
+attribution into :mod:`repro.obs` (see ``docs/observability.md``).
 """
 from __future__ import annotations
 

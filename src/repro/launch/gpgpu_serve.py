@@ -27,10 +27,12 @@ reports the throughput ratio.
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import numpy as np
 
+from repro import obs
 from repro import runtime as rt
 from repro.core import asm, isa, scheduler
 from repro.core.programs import ALL, compiled_kernels
@@ -181,7 +183,8 @@ def run_sequential_baseline(work) -> float:
 def drain_workload(work, n_sm: int, tenants: int = 4,
                    policy: str = "bucket",
                    max_window_cycles: int = None,
-                   resident: bool = False):
+                   resident: bool = False,
+                   metrics: "obs.MetricsRegistry" = None):
     """Submit ``work`` to a fresh cold-cache server and drain it.
 
     Oracle-checks every ticket; returns ``(server, stats, wall_s)``.
@@ -189,12 +192,20 @@ def drain_workload(work, n_sm: int, tenants: int = 4,
     (``RuntimeServer(resident_gmem=True)``): tenant memory is adopted
     onto the device at submit and stays there across drain windows; the
     oracle check below is then the first host read of each result.
+
+    The server writes its latency histograms and drain gauges into a
+    fresh :class:`~repro.obs.MetricsRegistry` (or the one passed in), so
+    each call's telemetry is isolated; the drain's per-bucket jit
+    compile attribution (wall-ms, cache misses — captured as a delta of
+    the process-wide counters) is attached as ``srv.jit_attribution``.
     """
     import jax
     jax.clear_caches()
     srv = rt.RuntimeServer(n_sm=n_sm, policy=policy,
                            max_window_cycles=max_window_cycles,
-                           resident_gmem=resident)
+                           resident_gmem=resident,
+                           metrics=metrics or obs.MetricsRegistry())
+    jit_before = obs.jit_summary()
     tickets = {}
     t0 = time.perf_counter()
     for i, (name, mod, n, code, (grid, bd), g0) in enumerate(work):
@@ -203,11 +214,24 @@ def drain_workload(work, n_sm: int, tenants: int = 4,
         tickets[t] = (mod, n, g0)
     results, stats = srv.drain()
     wall = time.perf_counter() - t0
+    srv.jit_attribution = obs.jit_delta(jit_before, obs.jit_summary())
     for t, (mod, n, g0) in tickets.items():
         np.testing.assert_array_equal(
             np.asarray(results[t].gmem)[mod.out_slice(n)],
             mod.oracle(g0, n))
     return srv, stats, wall
+
+
+def metrics_document(srv) -> dict:
+    """The serving run's full telemetry as one JSON-safe document: the
+    server's registry snapshot (latency histograms, ``drain.*`` /
+    ``pool.*`` gauges, ``server.*`` counters) plus the drain's jit
+    compile attribution and the process transfer counters.  The CLI's
+    ``--metrics`` print, ``--metrics-out`` dump, and the BENCH JSON rows
+    all derive from this one shape."""
+    return {"metrics": srv.metrics.snapshot(),
+            "jit": getattr(srv, "jit_attribution", {}),
+            "transfers": rt.TRANSFERS.snapshot()}
 
 
 def print_stats(srv, stats, wall: float, n_sm: int, tenants: int) -> None:
@@ -225,22 +249,20 @@ def print_stats(srv, stats, wall: float, n_sm: int, tenants: int) -> None:
     print(f"[serve] drain makespan {stats.makespan_cycles} cycles "
           f"(busy {stats.busy_cycles}, duration balance "
           f"{stats.duration_balance:.2f})")
-    if stats.pool is not None and srv.resident_gmem:
-        p = stats.pool
-        print(f"[serve] gmem pool: {p['entries']} resident "
-              f"({p['pinned']} pinned), {p['host_uploads']} uploads / "
-              f"{p['host_syncs']} syncs / {p['evictions']} evictions, "
-              f"{p['hits']} hits / {p['misses']} misses")
-    for client in sorted(stats.by_tenant):
-        ts = stats.by_tenant[client]
-        print(f"[serve]   tenant {client}: {ts.launches} launches / "
-              f"{ts.blocks} blocks, gmem useful={ts.useful_gmem_words} "
-              f"padded={ts.padded_gmem_words}")
-    for bucket in sorted(stats.by_bucket):
-        bs = stats.by_bucket[bucket]
-        print(f"[serve]   bucket {bucket}w: {bs.launches} launches / "
-              f"{bs.sub_batches} sub-batches, padded={bs.padded_gmem_words},"
-              f" occupancy {bs.occupancy:.2f}")
+    # the per-tenant / per-bucket / pool detail is one render of the
+    # registry snapshot — the same dict --metrics-out and the BENCH
+    # JSON carry, so the CLI cannot drift from the recorded telemetry
+    # (gauges here; --metrics prints the full snapshot)
+    snap = srv.metrics.snapshot()
+    print(obs.render_snapshot({"gauges": snap["gauges"]},
+                              prefix="[serve]   "))
+    jit = getattr(srv, "jit_attribution", None)
+    if jit:
+        for bucket in sorted(jit):
+            d = jit[bucket]
+            print(f"[serve]   jit {bucket}: "
+                  f"{d.get('jit_cache_misses', 0)} misses, "
+                  f"{d.get('jit_trace_ms', 0.0):.1f} ms tracing")
 
 
 def main(argv=None):
@@ -270,6 +292,17 @@ def main(argv=None):
                     help="keep tenant global memory device-resident "
                          "across drain windows (GmemPool); host gmem "
                          "crosses once at submit and once at read-back")
+    ap.add_argument("--trace-out", metavar="PATH", default=None,
+                    help="record the drain's launch-lifecycle span tree "
+                         "and write Chrome-trace/Perfetto JSON to PATH "
+                         "(open in chrome://tracing or ui.perfetto.dev)")
+    ap.add_argument("--metrics", action="store_true",
+                    help="print the full metrics-registry snapshot "
+                         "(histogram stats included) after the drain")
+    ap.add_argument("--metrics-out", metavar="PATH", default=None,
+                    help="dump the metrics document (registry snapshot "
+                         "+ jit attribution + transfer counters) as "
+                         "JSON to PATH")
     args = ap.parse_args(argv)
 
     if args.skewed and args.longtail:
@@ -288,11 +321,28 @@ def main(argv=None):
               f"calls in {t_seq:.2f}s "
               f"({len(work) / t_seq:.2f} launches/s)")
 
-    srv, stats, wall = drain_workload(work, args.n_sm, args.tenants,
-                                      args.policy,
-                                      args.max_window_cycles,
-                                      resident=args.resident_gmem)
+    if args.trace_out:
+        obs.TRACER.start()
+    try:
+        srv, stats, wall = drain_workload(work, args.n_sm, args.tenants,
+                                          args.policy,
+                                          args.max_window_cycles,
+                                          resident=args.resident_gmem)
+    finally:
+        if args.trace_out:
+            obs.TRACER.stop()
+    if args.trace_out:
+        doc = obs.TRACER.export(args.trace_out)
+        print(f"[serve] wrote {len(doc['traceEvents'])} trace events "
+              f"to {args.trace_out}")
     print_stats(srv, stats, wall, args.n_sm, args.tenants)
+    if args.metrics:
+        print(obs.render_snapshot(srv.metrics.snapshot(),
+                                  prefix="[metrics] "))
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            json.dump(metrics_document(srv), f, indent=1)
+        print(f"[serve] wrote metrics snapshot to {args.metrics_out}")
     if t_seq is not None:
         print(f"[serve] throughput vs sequential: {t_seq / wall:.2f}x")
     return stats

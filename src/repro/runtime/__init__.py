@@ -36,6 +36,12 @@ resident machine handles many tenants' binaries back-to-back:
 ``repro.core.scheduler.run_grid`` is a thin compatibility wrapper over
 :func:`executor.run_grid`, so every pre-runtime benchmark and test
 exercises this path.
+
+Every layer above emits into :mod:`repro.obs` — launch-lifecycle spans
+(``TRACER``), transfer/cache counters and latency histograms
+(``METRICS``), and per-bucket jit compile attribution — see
+``docs/observability.md``.  The globals are re-exported here for
+convenience.
 """
 from .registry import (CODE_BUCKETS, GMEM_MIN_WORDS, SEED_CYCLES_PER_INSTR,
                        WARP_BUCKETS, CostEstimate, CostModel, Footprint,
@@ -50,6 +56,7 @@ from .policy import (POLICIES, AdmissionError, BalancedDrain, BucketDrain,
                      BucketStats, DrainPolicy, FairBucketDrain,
                      MonolithicDrain, TenantStats, make_policy)
 from .server import DepGmem, DrainStats, LaunchRequest, RuntimeServer
+from ..obs import METRICS, TRACER, MetricsRegistry, Tracer
 
 __all__ = [
     "AdmissionError", "BLOCK_SCHED_OVERHEAD", "BalancedDrain",
@@ -58,9 +65,10 @@ __all__ = [
     "Event", "FairBucketDrain", "Footprint", "GMEM_MIN_WORDS", "GmemPool",
     "GridResult", "Launch", "LaunchRequest", "LaunchSpec",
     "LAUNCH_BUCKETS", "MonolithicDrain", "Module", "ModuleRegistry",
+    "METRICS", "MetricsRegistry",
     "MultiSMReport", "POLICIES", "QueuedLaunch", "QueuedStream", "Runtime",
-    "RuntimeServer", "SEED_CYCLES_PER_INSTR", "Stream", "TRANSFERS",
-    "TenantStats", "TransferLog",
+    "RuntimeServer", "SEED_CYCLES_PER_INSTR", "Stream", "TRACER",
+    "TRANSFERS", "TenantStats", "Tracer", "TransferLog",
     "WARP_BUCKETS", "bucket_code_len", "bucket_gmem_len",
     "bucket_launches", "bucket_warps", "execute", "footprint",
     "make_policy", "pad_code", "run_grid",

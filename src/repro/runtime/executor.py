@@ -38,6 +38,7 @@ import numpy as np
 
 from ..core import isa
 from ..core.pipeline import Counters, MachineConfig, run_block_body
+from ..obs import METRICS, TRACER, jit_call
 from . import registry as reg
 from .registry import Module, ModuleRegistry
 
@@ -46,35 +47,74 @@ from .registry import Module, ModuleRegistry
 BLOCK_SCHED_OVERHEAD = 24
 
 
-class TransferLog:
-    """Counts host<->device crossings on the executor's hot path.
+def _transfer(field: str) -> None:
+    """Count one host<->device crossing (``transfers.<field>`` counter)."""
+    METRICS.counter("transfers." + field).inc()
 
-    The resident-gmem serving mode promises *zero* host gmem round-trips
-    between the windows of a drain; this module-level log is the test
-    hook that proves it.  ``gmem_uploads`` counts host arrays padded
-    onto the device (:func:`_pad_gmem_device`), ``gmem_syncs`` counts
-    per-launch gmem materializations back to numpy
-    (:meth:`DeviceGrid.to_results` with ``host_gmem=True``), and
-    ``counter_syncs`` counts the one batched accounting fetch each
-    :class:`DeviceGrid` performs (:meth:`DeviceGrid._host_fetch`).
+
+class TransferLog:
+    """Deprecation shim: a *view* over the ``transfers.*`` registry
+    counters.
+
+    The executor's transfer counts — ``gmem_uploads`` (host arrays
+    padded onto the device in :func:`_pad_gmem_device`), ``gmem_syncs``
+    (per-launch gmem materializations in :meth:`DeviceGrid.to_results`
+    with ``host_gmem=True``) and ``counter_syncs`` (the one batched
+    accounting fetch in :meth:`DeviceGrid._host_fetch`) — now live in
+    :data:`repro.obs.METRICS` as ``transfers.*`` counters.  This class
+    keeps the historical ``TRANSFERS.reset(); ...; TRANSFERS.gmem_syncs``
+    idiom working: each view holds a per-field baseline, ``reset()``
+    re-bases the view (the underlying counters are monotone and never
+    rewind), and attribute reads return *counter − baseline*.
+
+    New code should prefer :meth:`window`, which returns an independent
+    zero-based view — scoped measurement without mutating the shared
+    ``TRANSFERS`` baseline other code may be relying on.
     """
 
+    _FIELDS = ("gmem_uploads", "gmem_syncs", "counter_syncs")
+
     def __init__(self) -> None:
+        object.__setattr__(self, "_base",
+                           {f: 0 for f in self._FIELDS})
         self.reset()
 
+    def _raw(self, field: str) -> int:
+        return METRICS.counter("transfers." + field).value
+
+    def __getattr__(self, name: str) -> int:
+        if name in self._FIELDS:
+            return self._raw(name) - self._base[name]
+        raise AttributeError(name)
+
+    def __setattr__(self, name: str, value) -> None:
+        if name in self._FIELDS:
+            # legacy direct mutation (`TRANSFERS.gmem_uploads += 1`)
+            # routes the delta into the registry counter
+            METRICS.counter("transfers." + name).inc(
+                value - getattr(self, name))
+        else:
+            object.__setattr__(self, name, value)
+
     def reset(self) -> "TransferLog":
-        self.gmem_uploads = 0
-        self.gmem_syncs = 0
-        self.counter_syncs = 0
+        """Re-base this view: all three fields read 0 until the next
+        crossing.  Registry counters are untouched."""
+        for f in self._FIELDS:
+            self._base[f] = self._raw(f)
         return self
 
+    def window(self) -> "TransferLog":
+        """A fresh zero-based view over the same counters — the scoped
+        measurement idiom (``w = TRANSFERS.window(); ...; w.gmem_syncs``)
+        that cannot disturb other holders' baselines."""
+        return TransferLog()
+
     def snapshot(self) -> dict:
-        return dict(gmem_uploads=self.gmem_uploads,
-                    gmem_syncs=self.gmem_syncs,
-                    counter_syncs=self.counter_syncs)
+        return {f: getattr(self, f) for f in self._FIELDS}
 
 
-#: Process-wide transfer counters (reset() in tests around a drain).
+#: Process-wide transfer-counter view (see :class:`TransferLog`; the
+#: counters themselves live in ``repro.obs.METRICS``).
 TRANSFERS = TransferLog()
 
 #: Launch-batch-width buckets: a drain of L concurrent launches pads its
@@ -228,7 +268,7 @@ def _run_positions(cfg: MachineConfig, n_warps: int, codes, bdims, bd_xys,
 def _pad_gmem_device(gmem, width: int) -> jnp.ndarray:
     """Pad one launch's global memory to its bucket, staying on device."""
     if not isinstance(gmem, jax.Array):
-        TRANSFERS.gmem_uploads += 1          # host numpy crossing over
+        _transfer("gmem_uploads")            # host numpy crossing over
     g = jnp.asarray(gmem, jnp.int32)
     if g.shape[0] == width:
         return g
@@ -285,8 +325,10 @@ class DeviceGrid:
         accounting sync instead of seven scattered ``np.asarray`` hops
         (six counter leaves + the SM-cycle lanes)."""
         if self._host is None:
-            TRANSFERS.counter_syncs += 1
-            self._host = jax.device_get((self._ctrs, self._sm_cyc))
+            _transfer("counter_syncs")
+            with TRACER.span("counter-sync", n_sm=self.n_sm,
+                             n_blocks=int(sum(self._blocks))):
+                self._host = jax.device_get((self._ctrs, self._sm_cyc))
         return self._host
 
     def report(self) -> MultiSMReport:
@@ -324,7 +366,7 @@ class DeviceGrid:
         for i, (off, nb) in enumerate(zip(self._offsets, self._blocks)):
             sl = slice(off, off + nb)
             if host_gmem:
-                TRANSFERS.gmem_syncs += 1
+                _transfer("gmem_syncs")
                 gmem_i = np.asarray(self.launch_gmem(i))
             else:
                 gmem_i = self.launch_gmem(i)
@@ -451,9 +493,16 @@ def execute(launches: Sequence[LaunchSpec], n_sm: int = 1,
         if shardings is not None:
             group = tuple(jax.device_put(a, s)
                           for a, s in zip(group, shardings))
-        gmems, sm_cyc, ctr = _run_positions(
-            cfg, n_warps, codes_d, bdims_d, bd_xys_d, grid_xys_d,
-            *group, gmems, sm_cyc)
+        bucket = f"c{code_len}g{g_width}w{n_warps}sm{n_sm}"
+        with TRACER.span("device-execute", bucket=bucket, width=width,
+                         n_blocks=take, n_sm=n_sm), \
+             jit_call("executor.run_positions", _run_positions,
+                      bucket=bucket,
+                      key=(cfg, n_warps, l_bucket, code_len, g_width,
+                           width, n_sm, shardings is not None)):
+            gmems, sm_cyc, ctr = _run_positions(
+                cfg, n_warps, codes_d, bdims_d, bd_xys_d, grid_xys_d,
+                *group, gmems, sm_cyc)
         # strip this group's padding so stacked counter index == global
         # block position
         ctr_groups.append(jax.tree.map(lambda x: x[:take], ctr))

@@ -40,6 +40,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, NamedTuple, Sequence, Union
 
+from ..obs import safe_div
 from . import registry as reg
 from .registry import ModuleRegistry
 
@@ -77,8 +78,10 @@ class BucketStats:
 
     @property
     def occupancy(self) -> float:
-        """Fraction of SM-step slots that held a real block."""
-        return self.blocks / self.sm_slots if self.sm_slots else 0.0
+        """Fraction of SM-step slots that held a real block.  Finite by
+        construction (0.0 for a bucket that never dispatched) — feeds
+        BENCH JSON rows and ``drain.bucket.*`` gauges verbatim."""
+        return safe_div(self.blocks, self.sm_slots)
 
 
 class SubBatch(NamedTuple):

@@ -44,6 +44,12 @@ from typing import Dict, NamedTuple, Optional
 import numpy as np
 
 from ..core import isa
+from ..obs import METRICS
+
+
+def _count(name: str, n: int = 1) -> None:
+    """Mirror a cache/pool event into the process metrics registry."""
+    METRICS.counter(name).inc(n)
 
 #: Padded-program-length buckets.  All five paper kernels build at
 #: PROGRAM_PAD = 96; foreign binaries round up to the nearest bucket
@@ -264,6 +270,7 @@ class GmemPool:
         if isinstance(gmem, jax.Array):
             return gmem
         self.host_uploads += 1
+        _count("gmem_pool.host_uploads")
         return jnp.asarray(np.asarray(gmem, np.int32))
 
     def put(self, ticket: int, gmem, pin: bool = False) -> None:
@@ -286,8 +293,10 @@ class GmemPool:
         g = self._mem.get(ticket)
         if g is None:
             self.misses += 1
+            _count("gmem_pool.misses")
             return None
         self.hits += 1
+        _count("gmem_pool.hits")
         self._mem.pop(ticket)
         self._mem[ticket] = g                 # re-insert: dict order = LRU
         return g
@@ -298,6 +307,7 @@ class GmemPool:
         if g is None:
             return None
         self.host_syncs += 1
+        _count("gmem_pool.host_syncs")
         return np.asarray(g, np.int32)
 
     def evict(self, ticket: int) -> Optional[np.ndarray]:
@@ -310,6 +320,8 @@ class GmemPool:
             return None
         self.evictions += 1
         self.host_syncs += 1
+        _count("gmem_pool.evictions")
+        _count("gmem_pool.host_syncs")
         return np.asarray(g, np.int32)
 
     def release(self, ticket: int) -> None:
@@ -360,11 +372,13 @@ class ModuleRegistry:
         mod = self._modules.get(key)
         if mod is not None:
             self.hits += 1
+            _count("module_cache.hits")
             # LRU refresh: re-insert at the back of the dict order
             self._modules.pop(key)
             self._modules[key] = mod
             return mod
         self.misses += 1
+        _count("module_cache.misses")
         if self.max_modules and len(self._modules) >= self.max_modules:
             evicted = self._modules.pop(next(iter(self._modules)))  # LRU
             self.cost_model.forget(evicted.key)

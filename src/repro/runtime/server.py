@@ -37,6 +37,7 @@ from typing import Dict, List, NamedTuple, Optional, Tuple, Union
 import numpy as np
 
 from ..core.pipeline import MachineConfig
+from ..obs import METRICS, TRACER, MetricsRegistry, Tracer, safe_div
 from . import executor as ex
 from . import policy as pol
 from .policy import AdmissionError, BucketStats, DrainPolicy, TenantStats
@@ -98,14 +99,31 @@ class DrainStats(NamedTuple):
         """Fraction of drain SM-time spent on real blocks:
         ``busy_cycles / (n_sm * makespan_cycles)`` — the duration
         analogue of the slot-count ``occupancy``; what BalancedDrain
-        raises on skewed-duration windows."""
-        denom = self.n_sm * self.makespan_cycles
-        return self.busy_cycles / denom if denom else 0.0
+        raises on skewed-duration windows.  Always finite: an empty
+        drain (zero makespan) reads 0.0, never NaN/inf — these ratios
+        land verbatim in BENCH JSON rows."""
+        return safe_div(self.busy_cycles, self.n_sm * self.makespan_cycles)
 
 
 #: sentinel distinguishing "argument not passed" (inherit the server's
 #: setting) from an explicit None ("unbounded for this call")
 _INHERIT = object()
+
+
+class _LaunchTiming:
+    """Host wall-clock (perf_counter seconds) milestones of one launch.
+
+    Feeds the server's latency histograms: total = complete − submit,
+    queue-wait = packed − submit, device = complete − dispatched (the
+    sub-batch's execute+materialize extent).  Popped at resolution or
+    drop; purely host-side."""
+
+    __slots__ = ("submit", "packed", "dispatched")
+
+    def __init__(self, submit: float) -> None:
+        self.submit = submit
+        self.packed: Optional[float] = None
+        self.dispatched: Optional[float] = None
 
 
 class RuntimeServer:
@@ -123,9 +141,18 @@ class RuntimeServer:
                  max_inflight_per_tenant: Optional[int] = 256,
                  max_window_cycles: Optional[int] = None,
                  resident_gmem: bool = False,
-                 gmem_pool_entries: Optional[int] = None):
+                 gmem_pool_entries: Optional[int] = None,
+                 metrics: Optional[MetricsRegistry] = None,
+                 tracer: Optional[Tracer] = None):
         self.n_sm = n_sm
         self.cfg = cfg
+        #: observability sinks — default to the process globals.  The
+        #: server emits unconditionally; a disabled registry / tracer
+        #: reduces every emission to a no-op (and never a device sync).
+        self.metrics = METRICS if metrics is None else metrics
+        self.tracer = TRACER if tracer is None else tracer
+        #: per-ticket submit/packed/dispatched wall-clock milestones
+        self._timings: Dict[int, _LaunchTiming] = {}
         # default: one SM-wide super-step per dispatch — small groups
         # keep lockstep dispatches homogeneous (a group runs as long as
         # its longest block), measurably better than wide groups for
@@ -236,50 +263,63 @@ class RuntimeServer:
         with other tenants; admission control (bounded queue, per-tenant
         cap) rejects with :class:`AdmissionError`.
         """
-        gx, gy = grid
-        if gx < 1 or gy < 1:
-            raise ValueError(f"empty grid {grid}")
-        if ex.warps_for(block_dim) < 1:
-            raise ValueError(f"empty block_dim {block_dim}")
-        if gx * gy > self.block_budget():
-            raise ValueError(
-                f"grid {grid} ({gx * gy} blocks) exceeds this server's "
-                f"per-drain block budget of {self.block_budget()} "
-                f"({self.n_sm} SMs x the executor's 2**15 blocks/SM "
-                "cycle-accumulator bound)")
-        if isinstance(gmem, QueuedLaunch):
-            gmem = self._gmem_or_dep(gmem)
-        if isinstance(gmem, DepGmem):
-            prod = next((r for r in self._pending
-                         if r.ticket == gmem.ticket), None)
-            if prod is None:
+        with self.tracer.span("submit", tenant=client) as sp:
+            gx, gy = grid
+            if gx < 1 or gy < 1:
+                raise ValueError(f"empty grid {grid}")
+            if ex.warps_for(block_dim) < 1:
+                raise ValueError(f"empty block_dim {block_dim}")
+            if gx * gy > self.block_budget():
                 raise ValueError(
-                    f"dependent launch references producer ticket "
-                    f"{gmem.ticket}, which is not pending on this server")
-            # never trust a caller-supplied length: the dependent's gmem
-            # bucket must match the memory that will be materialized, or
-            # window-mates merged on its footprint would silently pad to
-            # the producer's real width
-            gmem = DepGmem(gmem.ticket, int(prod.spec.gmem.shape[0]))
-        else:
-            if isinstance(gmem, np.ndarray) or not hasattr(gmem, "ndim"):
-                gmem = np.array(gmem, np.int32)  # snapshot (lists too)
-            if gmem.ndim != 1:
-                raise ValueError(
-                    f"gmem must be 1-D, got shape {gmem.shape}")
-            if self.resident_gmem:
-                # upload once at the door; every window of every drain
-                # then sees a device array (zero per-window rebuilds)
-                gmem = self.gmem_pool.adopt(gmem)
-        self._admit(client)
-        mod = self.registry.as_module(code)
-        ticket = self._next_ticket
-        self._next_ticket += 1
-        self._pending.append(LaunchRequest(
-            ticket, client, ex.LaunchSpec(mod, grid, block_dim, gmem)))
-        if isinstance(gmem, DepGmem):
-            self._dep_waiters[gmem.ticket] = \
-                self._dep_waiters.get(gmem.ticket, 0) + 1
+                    f"grid {grid} ({gx * gy} blocks) exceeds this server's "
+                    f"per-drain block budget of {self.block_budget()} "
+                    f"({self.n_sm} SMs x the executor's 2**15 blocks/SM "
+                    "cycle-accumulator bound)")
+            if isinstance(gmem, QueuedLaunch):
+                gmem = self._gmem_or_dep(gmem)
+            if isinstance(gmem, DepGmem):
+                prod = next((r for r in self._pending
+                             if r.ticket == gmem.ticket), None)
+                if prod is None:
+                    raise ValueError(
+                        f"dependent launch references producer ticket "
+                        f"{gmem.ticket}, which is not pending on this "
+                        "server")
+                # never trust a caller-supplied length: the dependent's
+                # gmem bucket must match the memory that will be
+                # materialized, or window-mates merged on its footprint
+                # would silently pad to the producer's real width
+                gmem = DepGmem(gmem.ticket, int(prod.spec.gmem.shape[0]))
+            else:
+                if isinstance(gmem, np.ndarray) or \
+                        not hasattr(gmem, "ndim"):
+                    gmem = np.array(gmem, np.int32)  # snapshot (lists too)
+                if gmem.ndim != 1:
+                    raise ValueError(
+                        f"gmem must be 1-D, got shape {gmem.shape}")
+                if self.resident_gmem:
+                    # upload once at the door; every window of every
+                    # drain then sees a device array (zero per-window
+                    # rebuilds)
+                    gmem = self.gmem_pool.adopt(gmem)
+            with self.tracer.span("admit", tenant=client):
+                self._admit(client)
+            mod = self.registry.as_module(code)
+            ticket = self._next_ticket
+            self._next_ticket += 1
+            self._pending.append(LaunchRequest(
+                ticket, client, ex.LaunchSpec(mod, grid, block_dim, gmem)))
+            if isinstance(gmem, DepGmem):
+                self._dep_waiters[gmem.ticket] = \
+                    self._dep_waiters.get(gmem.ticket, 0) + 1
+            sp.set(ticket=ticket, n_blocks=gx * gy)
+            self._timings[ticket] = _LaunchTiming(time.perf_counter())
+            self.tracer.begin_async(
+                "launch", ticket, f"launch t{ticket} {client}",
+                tenant=client, ticket=ticket, n_blocks=gx * gy,
+                module=mod.name)
+            self.metrics.counter("server.submitted").inc()
+            self.metrics.counter(f"server.submitted.{client}").inc()
         return ticket
 
     def submit_future(self, code, grid, block_dim, gmem,
@@ -467,6 +507,12 @@ class RuntimeServer:
             req = work.pop()
             ts = self.tenant_stats.setdefault(req.client, TenantStats())
             ts.dropped += 1
+            self.metrics.counter("server.dropped").inc()
+            self._timings.pop(req.ticket, None)
+            # the launch's lifecycle event still terminates — a trace of
+            # a failing drain shows every launch closed, some with error
+            self.tracer.end_async("launch", req.ticket,
+                                  dropped=True, error=str(err))
             fut = self._futures.pop(req.ticket, None)
             if fut is not None:
                 fut._fail(err)
@@ -568,43 +614,74 @@ class RuntimeServer:
         self._pending = []
         requeue: List[LaunchRequest] = []
         first_error: Optional[BaseException] = None
-        while queue and (max_windows is None or n_windows < max_windows):
-            window = self._pack_window(queue, max_window_cycles)
-            n_windows += 1
-            for sb in self._topo_order(self._cut(window)):
+        drain_sp = self.tracer.span(
+            "drain", n_sm=self.n_sm, pending=len(queue),
+            policy=type(self.policy).__name__)
+        with drain_sp:
+          while queue and (max_windows is None or n_windows < max_windows):
+            with self.tracer.span("window", index=n_windows) as win_sp:
+              with self.tracer.span("pack"):
+                window = self._pack_window(queue, max_window_cycles)
+              n_windows += 1
+              win_sp.set(n_launches=len(window))
+              t_pack = time.perf_counter()
+              for r in window:
+                  tm = self._timings.get(r.ticket)
+                  if tm is not None and tm.packed is None:
+                      tm.packed = t_pack
+                      self.tracer.timed_span(
+                          "queue-wait", tm.submit, t_pack,
+                          ticket=r.ticket, tenant=r.client)
+              for sb in self._topo_order(self._cut(window)):
                 # materialize dependent launches' memories from their
                 # producers' completed results; a dependent whose
                 # producer has not completed yet (requeued after a
                 # failure, or queued beyond this drain's window bound)
                 # requeues WITHOUT a retry bump — it never executed
                 ready, specs = [], []
-                for r in sb.requests:
-                    g = r.spec.gmem
-                    if isinstance(g, DepGmem):
-                        src = self._dep_lookup(g.ticket, results)
-                        if src is None:
-                            if g.ticket in self._dep_dropped:
-                                self._drop(r, RuntimeError(
-                                    f"producer ticket {g.ticket} was "
-                                    "dropped"), queue, requeue)
-                            else:
-                                requeue.append(r)
-                            continue
-                        specs.append(r.spec._replace(gmem=src))
-                    else:
-                        specs.append(r.spec)
-                    ready.append(r)
+                with self.tracer.span("dep-resolve",
+                                      n_launches=len(sb.requests)):
+                    for r in sb.requests:
+                        g = r.spec.gmem
+                        if isinstance(g, DepGmem):
+                            src = self._dep_lookup(g.ticket, results)
+                            if src is None:
+                                if g.ticket in self._dep_dropped:
+                                    self._drop(r, RuntimeError(
+                                        f"producer ticket {g.ticket} was "
+                                        "dropped"), queue, requeue)
+                                else:
+                                    requeue.append(r)
+                                continue
+                            specs.append(r.spec._replace(gmem=src))
+                        else:
+                            specs.append(r.spec)
+                        ready.append(r)
                 if not ready:
                     continue
                 sb = sb._replace(requests=tuple(ready))
+                predicted = sum(pol.request_duration(r, self.registry)
+                                for r in sb.requests)
+                t_disp = time.perf_counter()
+                for r in sb.requests:
+                    tm = self._timings.get(r.ticket)
+                    if tm is not None:
+                        tm.dispatched = t_disp
+                disp_sp = self.tracer.span(
+                    "dispatch", gmem_bucket=sb.gmem_bucket,
+                    n_launches=len(sb.requests),
+                    tenants=sorted({r.client for r in sb.requests}),
+                    tickets=[r.ticket for r in sb.requests],
+                    predicted_cycles=int(predicted))
                 try:
-                    dg = ex.execute(specs,
-                                    n_sm=self.n_sm, cfg=self.cfg,
-                                    chunk=self.chunk,
-                                    pad_warps=sb.pad_warps,
-                                    registry=self.registry)
-                    sub_results = dg.to_results(
-                        host_gmem=not self.resident_gmem)
+                    with disp_sp:
+                        dg = ex.execute(specs,
+                                        n_sm=self.n_sm, cfg=self.cfg,
+                                        chunk=self.chunk,
+                                        pad_warps=sb.pad_warps,
+                                        registry=self.registry)
+                        sub_results = dg.to_results(
+                            host_gmem=not self.resident_gmem)
                 except Exception as e:
                     # isolate the failure to this sub-batch: window-mates
                     # in other sub-batches still complete; this group's
@@ -615,6 +692,7 @@ class RuntimeServer:
                     # and its dependents are dropped with it
                     if first_error is None:
                         first_error = e
+                    self.metrics.counter("server.sub_batch_failures").inc()
                     for r in sb.requests:
                         if r.attempts + 1 < self.MAX_ATTEMPTS:
                             requeue.append(
@@ -626,20 +704,41 @@ class RuntimeServer:
                 # exactly once, independent of window completion order.
                 # Completed producers stash their memory for queued
                 # dependents; completed blocks feed the cost model.
-                for req, res in zip(sb.requests, sub_results):
-                    results[req.ticket] = res
-                    self.registry.cost_model.observe(
-                        req.spec.code, res.cycles_per_block)
-                    if req.ticket in self._dep_waiters:
-                        # pinned pool deposit: device arrays stay on
-                        # device; host results upload once at stash time
-                        self.gmem_pool.put(req.ticket, res.gmem, pin=True)
-                    for d in req.deps:
-                        self._dep_done(d)
-                    fut = self._futures.pop(req.ticket, None)
-                    if fut is not None:
-                        fut._resolve(res)
+                t_done = time.perf_counter()
+                with self.tracer.span("complete",
+                                      n_launches=len(sb.requests)):
+                    for req, res in zip(sb.requests, sub_results):
+                        results[req.ticket] = res
+                        self.registry.cost_model.observe(
+                            req.spec.code, res.cycles_per_block)
+                        if req.ticket in self._dep_waiters:
+                            # pinned pool deposit: device arrays stay on
+                            # device; host results upload once at stash
+                            # time
+                            self.gmem_pool.put(req.ticket, res.gmem,
+                                               pin=True)
+                        for d in req.deps:
+                            self._dep_done(d)
+                        fut = self._futures.pop(req.ticket, None)
+                        if fut is not None:
+                            fut._resolve(res)
+                        tm = self._timings.pop(req.ticket, None)
+                        if tm is not None:
+                            h = self.metrics.histogram
+                            h("server.latency_s").record(
+                                t_done - tm.submit)
+                            if tm.packed is not None:
+                                h("server.queue_wait_s").record(
+                                    tm.packed - tm.submit)
+                            if tm.dispatched is not None:
+                                h("server.device_s").record(
+                                    t_done - tm.dispatched)
+                        self.tracer.end_async(
+                            "launch", req.ticket, observed_cycles=int(
+                                np.asarray(res.cycles_per_block,
+                                           np.int64).sum()))
                 rep = dg.report()
+                disp_sp.set(observed_cycles=rep.kernel_cycles)
                 per_sm += rep.per_sm_cycles
                 n_blocks += rep.n_blocks
                 n_steps += rep.n_steps
@@ -662,11 +761,53 @@ class RuntimeServer:
         self.launches_served += n_launches
         stats = DrainStats(
             n_launches, n_blocks, self.n_sm, wall,
-            n_launches / max(wall, 1e-9), per_sm, n_steps,
+            safe_div(n_launches, max(wall, 1e-9)), per_sm, n_steps,
             n_windows=n_windows, n_sub_batches=n_sub_batches,
             useful_gmem_words=useful_words, padded_gmem_words=padded_words,
-            occupancy=n_blocks / sm_slots if sm_slots else 0.0,
+            occupancy=safe_div(n_blocks, sm_slots),
             by_tenant=by_tenant, by_bucket=by_bucket,
             makespan_cycles=makespan, busy_cycles=busy,
             pool=self.gmem_pool.stats())
+        drain_sp.set(n_launches=n_launches, n_windows=n_windows,
+                     wall_s=round(wall, 6))
+        self._publish_drain(stats)
         return results, stats
+
+    def _publish_drain(self, stats: DrainStats) -> None:
+        """Mirror one drain's accounting into the metrics registry —
+        counters for cumulative totals, gauges for this-drain values
+        (``drain.*``, ``drain.tenant.<t>.*``, ``drain.bucket.<b>.*``,
+        ``pool.*``).  The CLI's stats print and the BENCH JSON rows both
+        read these, so there is exactly one source of truth."""
+        m = self.metrics
+        m.counter("server.drains").inc()
+        m.counter("server.launches_served").inc(stats.n_launches)
+        g = m.gauge
+        g("drain.n_launches").set(stats.n_launches)
+        g("drain.n_blocks").set(stats.n_blocks)
+        g("drain.n_windows").set(stats.n_windows)
+        g("drain.n_sub_batches").set(stats.n_sub_batches)
+        g("drain.wall_s").set(round(stats.wall_s, 6))
+        g("drain.launches_per_s").set(round(stats.launches_per_s, 3))
+        g("drain.occupancy").set(round(stats.occupancy, 6))
+        g("drain.duration_balance").set(round(stats.duration_balance, 6))
+        g("drain.makespan_cycles").set(stats.makespan_cycles)
+        g("drain.busy_cycles").set(stats.busy_cycles)
+        g("drain.useful_gmem_words").set(stats.useful_gmem_words)
+        g("drain.padded_gmem_words").set(stats.padded_gmem_words)
+        for t, ts in (stats.by_tenant or {}).items():
+            g(f"drain.tenant.{t}.launches").set(ts.launches)
+            g(f"drain.tenant.{t}.blocks").set(ts.blocks)
+            g(f"drain.tenant.{t}.useful_gmem_words").set(
+                ts.useful_gmem_words)
+            g(f"drain.tenant.{t}.padded_gmem_words").set(
+                ts.padded_gmem_words)
+        for b, bs in (stats.by_bucket or {}).items():
+            g(f"drain.bucket.{b}.launches").set(bs.launches)
+            g(f"drain.bucket.{b}.sub_batches").set(bs.sub_batches)
+            g(f"drain.bucket.{b}.blocks").set(bs.blocks)
+            g(f"drain.bucket.{b}.occupancy").set(round(bs.occupancy, 6))
+            g(f"drain.bucket.{b}.padded_gmem_words").set(
+                bs.padded_gmem_words)
+        for k, v in (stats.pool or {}).items():
+            g(f"pool.{k}").set(v)

@@ -28,6 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.pipeline import MachineConfig
+from ..obs import TRACER
 from . import executor as ex
 from .registry import Module, ModuleRegistry
 
@@ -152,9 +153,12 @@ class Stream:
         if self._token is not None:
             g = g + self._token            # ordering edge from wait_event
             self._token = None
-        dg = ex.execute([ex.LaunchSpec(mod, grid, block_dim, g)],
-                        n_sm=self._rt.n_sm, cfg=self._rt.cfg,
-                        chunk=self._rt.chunk, registry=self._rt.registry)
+        with TRACER.span("stream-launch", module=mod.name,
+                         n_blocks=grid[0] * grid[1]):
+            dg = ex.execute([ex.LaunchSpec(mod, grid, block_dim, g)],
+                            n_sm=self._rt.n_sm, cfg=self._rt.cfg,
+                            chunk=self._rt.chunk,
+                            registry=self._rt.registry)
         launch = Launch(dg, mod, grid, block_dim)
         self._tail = launch
         self._gmem = launch.gmem()
@@ -223,13 +227,15 @@ class QueuedLaunch:
     def result(self) -> ex.GridResult:
         """The launch's :class:`GridResult`; drains the server if needed."""
         if not self._resolved:
-            try:
-                self._server.drain()
-            except Exception:
-                # another sub-batch of the drain failed — only propagate
-                # if *our* sub-batch did not complete
-                if not self._resolved:
-                    raise
+            with TRACER.span("future-wait", ticket=self.ticket,
+                             tenant=self.client):
+                try:
+                    self._server.drain()
+                except Exception:
+                    # another sub-batch of the drain failed — only
+                    # propagate if *our* sub-batch did not complete
+                    if not self._resolved:
+                        raise
         if self._error is not None:
             raise self._error
         if self._result is None:

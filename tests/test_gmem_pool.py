@@ -4,7 +4,8 @@ residency.
 The acceptance bar for ``RuntimeServer(resident_gmem=True)``: tenant
 global memory stays on device across drain windows — **zero** host gmem
 round-trips between the windows of a multi-window drain (asserted via
-the :data:`repro.runtime.TRANSFERS` counting hook) — and the results
+scoped ``rt.TRANSFERS.window()`` views over the metrics-registry
+transfer counters — see ``docs/observability.md``) — and the results
 are bit-identical to the host-round-trip path.  The pool itself is
 exercised directly for LRU/pin/evict/write-back semantics.
 """
@@ -108,12 +109,12 @@ def test_device_grid_single_counter_sync_per_window():
     """report() + to_results() share ONE batched device->host fetch."""
     code = _addk(5)
     g0 = np.arange(64, dtype=np.int32)
-    rt.TRANSFERS.reset()
+    transfers = rt.TRANSFERS.window()     # scoped zero-based view
     dg = rt.execute([rt.LaunchSpec(code, (1, 1), (32, 1), g0)], n_sm=2)
     dg.report()
     res = dg.to_results()[0]
-    assert rt.TRANSFERS.counter_syncs == 1
-    assert rt.TRANSFERS.gmem_syncs == 1   # one host materialization
+    assert transfers.counter_syncs == 1
+    assert transfers.gmem_syncs == 1      # one host materialization
     want = g0.copy()
     want[:32] += 5
     np.testing.assert_array_equal(res.gmem, want)
@@ -122,11 +123,11 @@ def test_device_grid_single_counter_sync_per_window():
 def test_to_results_device_gmem_stays_on_device():
     code = _addk(2)
     g0 = np.arange(64, dtype=np.int32)
-    rt.TRANSFERS.reset()
+    transfers = rt.TRANSFERS.window()
     dg = rt.execute([rt.LaunchSpec(code, (1, 1), (32, 1), g0)], n_sm=1)
     res = dg.to_results(host_gmem=False)[0]
     assert isinstance(res.gmem, jax.Array)
-    assert rt.TRANSFERS.gmem_syncs == 0
+    assert transfers.gmem_syncs == 0
 
 
 # ------------------------------------------------- server residency
@@ -138,11 +139,11 @@ def test_resident_drain_zero_host_gmem_roundtrips():
     g0 = np.arange(64, dtype=np.int32)
     srv = rt.RuntimeServer(n_sm=2, resident_gmem=True, max_batch=1)
     futs = _chain(srv, g0, (1, 2, 3))
-    rt.TRANSFERS.reset()
+    transfers = rt.TRANSFERS.window()
     _, stats = srv.drain()
     assert stats.n_windows == 3           # max_batch=1 -> 3 windows
-    assert rt.TRANSFERS.gmem_uploads == 0
-    assert rt.TRANSFERS.gmem_syncs == 0
+    assert transfers.gmem_uploads == 0
+    assert transfers.gmem_syncs == 0
     want = g0.copy()
     want[:32] += 6
     np.testing.assert_array_equal(np.asarray(futs[-1].gmem()), want)
@@ -156,11 +157,11 @@ def test_non_resident_drain_round_trips_every_window():
     g0 = np.arange(64, dtype=np.int32)
     srv = rt.RuntimeServer(n_sm=2, resident_gmem=False, max_batch=1)
     futs = _chain(srv, g0, (1, 2, 3))
-    rt.TRANSFERS.reset()
+    transfers = rt.TRANSFERS.window()
     _, stats = srv.drain()
     assert stats.n_windows == 3
-    assert rt.TRANSFERS.gmem_uploads == 3
-    assert rt.TRANSFERS.gmem_syncs == 3
+    assert transfers.gmem_uploads == 3
+    assert transfers.gmem_syncs == 3
     want = g0.copy()
     want[:32] += 6
     np.testing.assert_array_equal(np.asarray(futs[-1].gmem()), want)
@@ -222,9 +223,9 @@ def test_resident_pool_survives_across_drains():
     assert a.done() and not b.done()
     assert set(srv._dep_gmem) == {a.ticket}
     assert isinstance(srv._dep_gmem[a.ticket], jax.Array)
-    rt.TRANSFERS.reset()
+    transfers = rt.TRANSFERS.window()
     srv.drain()
-    assert rt.TRANSFERS.gmem_uploads == 0
+    assert transfers.gmem_uploads == 0
     want = g0.copy()
     want[:32] += 15
     np.testing.assert_array_equal(np.asarray(c.gmem()), want)
