@@ -106,11 +106,13 @@ class AddK:
 
     GMEM_WORDS = 128
 
-    def __init__(self, k: int, in_at: int = 0, out_at: int = 64):
+    def __init__(self, k: int, in_at: int = 0, out_at: int = 64,
+                 grid=(1, 1)):
         assert 1 <= k <= 60, "k+4 instructions must fit the 64 bucket"
         self.k = k
         self.in_at = in_at
         self.out_at = out_at
+        self.grid = grid
 
     def build(self, n=None) -> np.ndarray:
         p = asm.Program(f"addk{self.k}")
@@ -126,7 +128,7 @@ class AddK:
         return p.finish()
 
     def launch(self, n=None):
-        return (1, 1), (32, 1)
+        return self.grid, (32, 1)
 
     def make_gmem(self, rng, n=None) -> np.ndarray:
         g = np.zeros(self.GMEM_WORDS, np.int32)
@@ -184,7 +186,8 @@ def drain_workload(work, n_sm: int, tenants: int = 4,
                    policy: str = "bucket",
                    max_window_cycles: int = None,
                    resident: bool = False,
-                   metrics: "obs.MetricsRegistry" = None):
+                   metrics: "obs.MetricsRegistry" = None,
+                   shard_sm: bool = False):
     """Submit ``work`` to a fresh cold-cache server and drain it.
 
     Oracle-checks every ticket; returns ``(server, stats, wall_s)``.
@@ -204,7 +207,8 @@ def drain_workload(work, n_sm: int, tenants: int = 4,
     srv = rt.RuntimeServer(n_sm=n_sm, policy=policy,
                            max_window_cycles=max_window_cycles,
                            resident_gmem=resident,
-                           metrics=metrics or obs.MetricsRegistry())
+                           metrics=metrics or obs.MetricsRegistry(),
+                           shard_sm=shard_sm)
     jit_before = obs.jit_summary()
     tickets = {}
     t0 = time.perf_counter()
@@ -241,6 +245,11 @@ def print_stats(srv, stats, wall: float, n_sm: int, tenants: int) -> None:
           f"({stats.launches_per_s:.2f} launches/s), "
           f"binary cache {len(srv.registry)} modules "
           f"({srv.registry.hits} hits), per-SM cycles [{per_sm}]")
+    if stats.n_devices > 1:
+        per_dev = ",".join(str(int(c)) for c in stats.device_cycles)
+        print(f"[serve] sharded over {stats.n_devices} devices "
+              f"({stats.n_sm // stats.n_devices} SMs each): per-device "
+              f"cycles [{per_dev}], skew {stats.device_skew:.2f}")
     print(f"[serve] policy={srv.policy.name}: {stats.n_windows} windows / "
           f"{stats.n_sub_batches} sub-batches, gmem words "
           f"useful={stats.useful_gmem_words} "
@@ -288,6 +297,15 @@ def main(argv=None):
                     help="duration budget per drain window: stop "
                          "packing a window once its CostModel-predicted"
                          " cycles exceed this (bounds drain latency)")
+    ap.add_argument("--shard-sm", action="store_true",
+                    help="shard the SM axis across jax devices: every "
+                         "dispatch group lowers through shard_map over "
+                         "the SM mesh (bit-exact with the single-device "
+                         "path; falls back to it when no multi-device "
+                         "placement exists — see executor.shard_plan). "
+                         "Pair with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=8 to "
+                         "exercise on one CPU host")
     ap.add_argument("--resident-gmem", action="store_true",
                     help="keep tenant global memory device-resident "
                          "across drain windows (GmemPool); host gmem "
@@ -327,7 +345,8 @@ def main(argv=None):
         srv, stats, wall = drain_workload(work, args.n_sm, args.tenants,
                                           args.policy,
                                           args.max_window_cycles,
-                                          resident=args.resident_gmem)
+                                          resident=args.resident_gmem,
+                                          shard_sm=args.shard_sm)
     finally:
         if args.trace_out:
             obs.TRACER.stop()

@@ -45,15 +45,26 @@ def use_mesh(mesh: Mesh):
     return contextlib.nullcontext(mesh)
 
 
+def _make_mesh(shape, axes) -> Mesh:
+    """Version-portable mesh construction, same spirit as ``use_mesh``:
+    ``jax.make_mesh`` does not exist on older releases, where the
+    equivalent is a ``Mesh`` over ``mesh_utils.create_device_mesh``.
+    Every mesh factory below goes through this one shim."""
+    if hasattr(jax, "make_mesh"):
+        return jax.make_mesh(shape, axes)
+    from jax.experimental import mesh_utils
+    return Mesh(mesh_utils.create_device_mesh(shape), axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes)
+    return _make_mesh(shape, axes)
 
 
 def make_debug_mesh(n_devices: int = 1) -> Mesh:
     """Tiny mesh over real local devices for tests."""
-    return jax.make_mesh((1, n_devices), ("data", "model"))
+    return _make_mesh((1, n_devices), ("data", "model"))
 
 
 def make_sm_mesh(n_sm: int) -> Mesh:
@@ -65,7 +76,7 @@ def make_sm_mesh(n_sm: int) -> Mesh:
     placement, which is still the same policy).
     """
     n = min(max(1, n_sm), len(jax.devices()))
-    return jax.make_mesh((n,), ("sm",))
+    return _make_mesh((n,), ("sm",))
 
 
 def batch_axes(mesh: Mesh):
@@ -88,9 +99,7 @@ def _fit(mesh: Mesh, shape, spec_axes) -> P:
     fixed = []
     for dim, axis in zip(shape, spec_axes):
         n = _axis_size(mesh, axis)
-        fixed.append(axis if (n > 1 and dim % n == 0) else
-                     (axis if n == 1 and axis is None else
-                      (None if dim % n else axis)))
+        fixed.append(axis if dim % n == 0 else None)
     # pad spec to rank
     fixed += [None] * (len(shape) - len(fixed))
     return P(*fixed)
@@ -283,7 +292,7 @@ def decode_state_spec(path: str, shape, mesh: Mesh) -> P:
         if K % nm == 0:
             spec[3] = "model"
         elif T % nm == 0 and spec[2] is None:
-            spec[2] = "model" if spec[2] is None else spec[2]
+            spec[2] = "model"
         return _fit(mesh, shape, tuple(spec))
     if "cross" in path and len(shape) == 5:
         L, B, T, K, dh = shape

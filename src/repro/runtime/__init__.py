@@ -49,7 +49,8 @@ from .registry import (CODE_BUCKETS, GMEM_MIN_WORDS, SEED_CYCLES_PER_INSTR,
                        bucket_gmem_len, bucket_warps, footprint, pad_code)
 from .executor import (BLOCK_SCHED_OVERHEAD, LAUNCH_BUCKETS, TRANSFERS,
                        DeviceGrid, GridResult, LaunchSpec, MultiSMReport,
-                       TransferLog, bucket_launches, execute, run_grid)
+                       TransferLog, bucket_launches, execute, run_grid,
+                       shard_plan)
 from .stream import (Event, Launch, QueuedLaunch, QueuedStream, Runtime,
                      Stream)
 from .policy import (POLICIES, AdmissionError, BalancedDrain, BucketDrain,
@@ -71,5 +72,5 @@ __all__ = [
     "TRANSFERS", "TenantStats", "Tracer", "TransferLog",
     "WARP_BUCKETS", "bucket_code_len", "bucket_gmem_len",
     "bucket_launches", "bucket_warps", "execute", "footprint",
-    "make_policy", "pad_code", "run_grid",
+    "make_policy", "pad_code", "run_grid", "shard_plan",
 ]

@@ -395,8 +395,12 @@ def execute(launches: Sequence[LaunchSpec], n_sm: int = 1,
     ``n_sm``); the ragged tail is padded with masked duplicates of the
     first block so every dispatch reuses one compiled machine.
     ``pad_warps`` forces the SM width (the serving path pads all tenants
-    to one width); ``shard_sm`` places the SM axis on local devices via
-    :func:`repro.launch.mesh.make_sm_mesh` when more than one exists.
+    to one width); ``shard_sm`` executes each dispatch group
+    device-parallel via ``shard_map`` over the SM mesh of
+    :func:`repro.launch.mesh.make_sm_mesh` (see :func:`shard_plan` for
+    the placement contract) — bit-exact with the single-device path,
+    falling back to it when only one device exists or ``n_sm`` does not
+    divide over the devices.
     """
     if not launches:
         raise ValueError("execute() needs at least one launch")
@@ -466,6 +470,7 @@ def execute(launches: Sequence[LaunchSpec], n_sm: int = 1,
     sm_ids_all = (np.arange(n_blocks) % n_sm).astype(np.int32)
     spd_max = max(1, chunk // n_sm)          # super-steps per dispatch
 
+    mesh = shard_plan(n_sm) if shard_sm else None
     codes_d = jnp.asarray(codes)
     bdims_d = jnp.asarray(bdims)
     bd_xys_d = jnp.asarray(bd_xys)
@@ -487,19 +492,45 @@ def execute(launches: Sequence[LaunchSpec], n_sm: int = 1,
             pl = np.concatenate([pl, np.zeros(pad, np.int32)])
             pb = np.concatenate([pb, np.zeros((pad, 2), np.int32)])
             sm = np.concatenate([sm, np.zeros(pad, np.int32)])
-        group = (jnp.asarray(pl), jnp.asarray(pb),
-                 jnp.asarray(np.arange(width) < take), jnp.asarray(sm))
-        shardings = _sm_shardings(n_sm, width) if shard_sm else None
-        if shardings is not None:
-            group = tuple(jax.device_put(a, s)
-                          for a, s in zip(group, shardings))
+        valid = np.arange(width) < take
+        if mesh is not None:
+            # device-parallel dispatch: permute the group to SM-major
+            # order so P("sm") places each SM's blocks (and counter) on
+            # its owning device — placement matches the p % n_sm
+            # attribution by construction
+            perm = _sm_major_perm(width, n_sm)
+            inv = np.argsort(perm)
+            runner = _sharded_run_positions(cfg, n_warps, mesh, n_sm, spd)
+            group = (jnp.asarray(pl[perm]), jnp.asarray(pb[perm]),
+                     jnp.asarray(valid[perm]),
+                     jnp.asarray(perm.astype(np.int32)))
+            n_dev = int(mesh.devices.size)
+            bucket = f"c{code_len}g{g_width}w{n_warps}sm{n_sm}x{n_dev}dev"
+            METRICS.counter("shard.dispatch_groups").inc()
+            with TRACER.span("device-execute", bucket=bucket, width=width,
+                             n_blocks=take, n_sm=n_sm, n_devices=n_dev), \
+                 jit_call("executor.run_positions_sharded", runner,
+                          bucket=bucket,
+                          key=(cfg, n_warps, l_bucket, code_len, g_width,
+                               width, n_sm, n_dev)):
+                gmems, sm_cyc, ctr = runner(
+                    codes_d, bdims_d, bd_xys_d, grid_xys_d, *group,
+                    gmems, sm_cyc)
+            # gather the slot-sharded per-block counters back to global
+            # block-position order (and strip this group's padding)
+            take_idx = jnp.asarray(inv[:take])
+            ctr_groups.append(jax.tree.map(lambda x: x[take_idx], ctr))
+            lo += take
+            continue
+        group = (jnp.asarray(pl), jnp.asarray(pb), jnp.asarray(valid),
+                 jnp.asarray(sm))
         bucket = f"c{code_len}g{g_width}w{n_warps}sm{n_sm}"
         with TRACER.span("device-execute", bucket=bucket, width=width,
                          n_blocks=take, n_sm=n_sm), \
              jit_call("executor.run_positions", _run_positions,
                       bucket=bucket,
                       key=(cfg, n_warps, l_bucket, code_len, g_width,
-                           width, n_sm, shardings is not None)):
+                           width, n_sm)):
             gmems, sm_cyc, ctr = _run_positions(
                 cfg, n_warps, codes_d, bdims_d, bd_xys_d, grid_xys_d,
                 *group, gmems, sm_cyc)
@@ -515,27 +546,123 @@ def execute(launches: Sequence[LaunchSpec], n_sm: int = 1,
                       launch_blocks=nblocks, orig_lens=orig_lens)
 
 
-def _sm_shardings(n_sm: int, width: int):
-    """NamedShardings placing the schedule's block-batch axis on local
-    devices — device-parallel block execution via the mesh of
-    :mod:`repro.launch.mesh`.
+def shard_plan(n_sm: int):
+    """The SM mesh the sharded executor path will run over, or ``None``
+    when sharding is inactive (single local device, or ``n_sm`` not
+    divisible by the device count — each device must own a whole number
+    of SMs for placement to match attribution).
 
-    The placement is contiguous along the position axis while SM
-    *attribution* is strided (``p % n_sm``), so per-SM counter affinity
-    is layout-agnostic: results and executed counters are identical
-    either way, only block compute is spread across devices.  Returns
-    None (sharding skipped) when the dispatch width does not divide over
-    the devices; a single-device host degenerates to a no-op placement.
+    **Placement contract** (the fix for the old contiguous-placement /
+    strided-attribution mismatch): schedule position ``p`` is attributed
+    to SM ``p % n_sm``, and under sharding device ``d`` owns the
+    *contiguous SM range* ``[d * n_sm/n_dev, (d+1) * n_sm/n_dev)`` — so
+    each dispatch group is permuted to SM-major order before placement
+    and every SM's blocks, and its cycle counter, live on exactly one
+    device.  Per-SM counter accumulation is device-local with one psum
+    reduction; no cross-device counter traffic.
     """
-    from jax.sharding import NamedSharding, PartitionSpec as P
     from ..launch.mesh import make_sm_mesh
     mesh = make_sm_mesh(n_sm)
-    if width % mesh.devices.size != 0:
+    n_dev = mesh.devices.size
+    if n_dev <= 1 or n_sm % n_dev:
         return None
-    return (NamedSharding(mesh, P("sm")),
-            NamedSharding(mesh, P("sm", None)),
-            NamedSharding(mesh, P("sm")),
-            NamedSharding(mesh, P("sm")))
+    return mesh
+
+
+def _sm_major_perm(width: int, n_sm: int) -> np.ndarray:
+    """Permutation from SM-major slot ``q`` to schedule position ``p``.
+
+    ``q = s * spd + j  ->  p = j * n_sm + s`` (``spd`` super-steps per
+    dispatch): SM ``s``'s blocks become contiguous, so a ``P("sm")``
+    sharding of the slot axis puts each SM's blocks on its owning
+    device.  ``np.argsort`` of this is the inverse (position -> slot).
+    """
+    spd = width // n_sm
+    return np.arange(width).reshape(spd, n_sm).T.ravel()
+
+
+def _shard_map():
+    try:                                    # moved to jax.shard_map later
+        from jax.experimental.shard_map import shard_map
+    except ImportError:                     # pragma: no cover
+        from jax import shard_map
+    return shard_map
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_run_positions(cfg: MachineConfig, n_warps: int, mesh, n_sm: int,
+                           spd: int):
+    """Build + jit one sharded dispatch: ``shard_map`` over the SM mesh.
+
+    Device-parallel block execution with the single-device semantics
+    preserved bit-exactly:
+
+    * each device vmaps only the SM-major slots of the SMs it owns;
+    * global memory merges by **last writer in schedule-position order**
+      — each device scans its local blocks tracking (max writing
+      position, value) per word, then a ``pmax``/``psum`` pair picks the
+      globally latest write, exactly reproducing the unsharded scan
+      merge (positions are unique, so the psum sums one winner);
+    * per-SM cycle counters accumulate on the owning device into the
+      split hi/lo lanes and reduce psum-style into the replicated
+      ``(2, n_sm)`` accumulator;
+    * per-block counters come back sharded along the slot axis; the
+      caller gathers them back to schedule order via the inverse
+      permutation, so :class:`DeviceGrid` bookkeeping is unchanged.
+    """
+    from jax.sharding import PartitionSpec as P
+    n_dev = mesh.devices.size
+    sm_per_dev = n_sm // n_dev
+    local_w = sm_per_dev * spd
+
+    def body(codes, bdims, bd_xys, grid_xys, pos_launch, pos_bxy,
+             pos_valid, pos_ids, gmems, sm_cyc):
+        def run_one(li, bxy):
+            return run_block_body(cfg, n_warps, codes[li], bdims[li],
+                                  bd_xys[li], bxy, grid_xys[li], gmems[li])
+
+        mem, wrt, ctr = jax.vmap(run_one)(pos_launch, pos_bxy)
+
+        # device-local last-writer merge: track, per (launch, word), the
+        # highest schedule position that wrote and its value
+        last0 = jnp.full(gmems.shape, -1, jnp.int32)
+        val0 = jnp.zeros_like(gmems)
+
+        def merge(carry, x):
+            last, val = carry
+            mem_i, wrt_i, li, valid, pid = x
+            newer = wrt_i & valid & (pid > last[li])
+            return (last.at[li].set(jnp.where(newer, pid, last[li])),
+                    val.at[li].set(jnp.where(newer, mem_i, val[li]))), None
+
+        (last, val), _ = jax.lax.scan(
+            merge, (last0, val0), (mem, wrt, pos_launch, pos_valid,
+                                   pos_ids))
+        # cross-device combine: the device holding the globally latest
+        # write wins; everyone else contributes 0 to the psum
+        gmax = jax.lax.pmax(last, "sm")
+        win = jnp.where((last == gmax) & (gmax >= 0), val, 0)
+        gmems = jnp.where(gmax >= 0, jax.lax.psum(win, "sm"), gmems)
+
+        # per-SM counters: slots q of local SM k map to global SM
+        # (device * sm_per_dev + k) — accumulation never leaves the
+        # owning device; one tiny psum folds the per-device partials
+        sm0 = jax.lax.axis_index("sm") * sm_per_dev
+        local_sm = sm0 + jnp.arange(local_w, dtype=jnp.int32) // spd
+        cost = jnp.where(pos_valid, ctr.cycles + BLOCK_SCHED_OVERHEAD, 0)
+        contrib = jnp.zeros((2, n_sm), jnp.int32) \
+            .at[0, local_sm].add(cost >> 16) \
+            .at[1, local_sm].add(cost & 0xFFFF)
+        sm_cyc = sm_cyc + jax.lax.psum(contrib, "sm")
+        return gmems, sm_cyc, ctr
+
+    sharded = _shard_map()(
+        body, mesh=mesh,
+        in_specs=(P(), P(), P(), P(), P("sm"), P("sm"), P("sm"), P("sm"),
+                  P(), P()),
+        out_specs=(P(), P(), P("sm")),
+        check_rep=False)
+    return jax.jit(sharded, donate_argnums=(8, 9))
 
 
 #: Registry behind bare execute()/run_grid() calls.  Bounded so a

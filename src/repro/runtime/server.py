@@ -93,6 +93,25 @@ class DrainStats(NamedTuple):
     makespan_cycles: int = 0     # sum over sub-batches of busiest-SM cycles
     busy_cycles: int = 0         # sum over sub-batches and SMs of real work
     pool: Optional[Dict[str, int]] = None   # GmemPool.stats() snapshot
+    n_devices: int = 1           # devices the SM axis sharded over
+
+    @property
+    def device_cycles(self) -> np.ndarray:
+        """Executed cycles per *device* under the sharded placement
+        contract: device ``d`` owns the contiguous SM range
+        ``[d * n_sm/n_devices, (d+1) * n_sm/n_devices)`` (see
+        ``executor.shard_plan``), so per-device load is the sum of its
+        SMs' counters.  With ``n_devices == 1`` this is the total."""
+        return self.per_sm_cycles.reshape(self.n_devices, -1).sum(1)
+
+    @property
+    def device_skew(self) -> float:
+        """Busiest device over mean device load (1.0 = perfectly even;
+        0.0 for an empty drain).  The cross-device balance analogue of
+        ``duration_balance``."""
+        dev = self.device_cycles
+        return safe_div(int(dev.max()), float(dev.mean())) if dev.size \
+            else 0.0
 
     @property
     def duration_balance(self) -> float:
@@ -143,9 +162,18 @@ class RuntimeServer:
                  resident_gmem: bool = False,
                  gmem_pool_entries: Optional[int] = None,
                  metrics: Optional[MetricsRegistry] = None,
-                 tracer: Optional[Tracer] = None):
+                 tracer: Optional[Tracer] = None,
+                 shard_sm: bool = False):
         self.n_sm = n_sm
         self.cfg = cfg
+        #: device-parallel SM execution: every dispatch group lowers
+        #: through ``shard_map`` over the SM mesh (see
+        #: ``executor.shard_plan``); falls back to the single-device
+        #: path — bit-exact either way — when no multi-device placement
+        #: exists.  ``n_devices`` is the resolved mesh size.
+        self.shard_sm = shard_sm
+        plan = ex.shard_plan(n_sm) if shard_sm else None
+        self.n_devices = int(plan.devices.size) if plan is not None else 1
         #: observability sinks — default to the process globals.  The
         #: server emits unconditionally; a disabled registry / tracer
         #: reduces every emission to a no-op (and never a device sync).
@@ -599,7 +627,8 @@ class RuntimeServer:
             return {}, DrainStats(0, 0, self.n_sm, 0.0, 0.0,
                                   np.zeros(self.n_sm, np.int64), 0,
                                   by_tenant={}, by_bucket={},
-                                  pool=self.gmem_pool.stats())
+                                  pool=self.gmem_pool.stats(),
+                                  n_devices=self.n_devices)
         t0 = time.perf_counter()
         # redeem sub-batches completed before a previous drain() raised
         results, self._completed = self._completed, {}
@@ -679,7 +708,8 @@ class RuntimeServer:
                                         n_sm=self.n_sm, cfg=self.cfg,
                                         chunk=self.chunk,
                                         pad_warps=sb.pad_warps,
-                                        registry=self.registry)
+                                        registry=self.registry,
+                                        shard_sm=self.shard_sm)
                         sub_results = dg.to_results(
                             host_gmem=not self.resident_gmem)
                 except Exception as e:
@@ -767,7 +797,7 @@ class RuntimeServer:
             occupancy=safe_div(n_blocks, sm_slots),
             by_tenant=by_tenant, by_bucket=by_bucket,
             makespan_cycles=makespan, busy_cycles=busy,
-            pool=self.gmem_pool.stats())
+            pool=self.gmem_pool.stats(), n_devices=self.n_devices)
         drain_sp.set(n_launches=n_launches, n_windows=n_windows,
                      wall_s=round(wall, 6))
         self._publish_drain(stats)
@@ -795,6 +825,11 @@ class RuntimeServer:
         g("drain.busy_cycles").set(stats.busy_cycles)
         g("drain.useful_gmem_words").set(stats.useful_gmem_words)
         g("drain.padded_gmem_words").set(stats.padded_gmem_words)
+        if stats.n_devices > 1:
+            g("drain.shard.n_devices").set(stats.n_devices)
+            g("drain.shard.device_skew").set(round(stats.device_skew, 6))
+            for d, c in enumerate(stats.device_cycles):
+                g(f"drain.shard.device.{d}.cycles").set(int(c))
         for t, ts in (stats.by_tenant or {}).items():
             g(f"drain.tenant.{t}.launches").set(ts.launches)
             g(f"drain.tenant.{t}.blocks").set(ts.blocks)

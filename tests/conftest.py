@@ -1,3 +1,19 @@
+"""Shared fixtures.
+
+Forces 8 virtual CPU devices (HomebrewNLP's
+``--xla_force_host_platform_device_count`` idiom) BEFORE anything
+imports jax, so the sharded-executor suite in ``test_sharding.py``
+exercises real multi-device placement on a single-CPU host.  An
+explicit count already present in ``XLA_FLAGS`` wins.
+"""
+import os
+
+if "xla_force_host_platform_device_count" not in \
+        os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count=8").strip()
+
 import numpy as np
 import pytest
 
