@@ -23,6 +23,14 @@ window by predicted duration (cost-model LPT) and cuts the drain
 makespan.  Every result is oracle-checked.  ``--baseline`` also times
 one sequential ``run_grid`` call per launch from cold jit caches and
 reports the throughput ratio.
+
+``--loop`` serves through a background
+:class:`~repro.runtime.ServingLoop` (continuous drain) instead of one
+explicit drain; ``--loadgen`` drives the loop with the seeded open-loop
+generator (Poisson / ``--bursty`` ON-OFF tenants at ``--rate`` over
+``--duration-s``), with ``--sla tenant=weight`` switching to
+SLA-weighted fair scheduling and ``--deadline-s`` shedding launches
+that outstay their latency budget — see ``docs/serving.md``.
 """
 from __future__ import annotations
 
@@ -226,16 +234,157 @@ def drain_workload(work, n_sm: int, tenants: int = 4,
     return srv, stats, wall
 
 
-def metrics_document(srv) -> dict:
+def metrics_document(srv, loadgen=None) -> dict:
     """The serving run's full telemetry as one JSON-safe document: the
     server's registry snapshot (latency histograms, ``drain.*`` /
     ``pool.*`` gauges, ``server.*`` counters) plus the drain's jit
     compile attribution and the process transfer counters.  The CLI's
     ``--metrics`` print, ``--metrics-out`` dump, and the BENCH JSON rows
-    all derive from this one shape."""
-    return {"metrics": srv.metrics.snapshot(),
-            "jit": getattr(srv, "jit_attribution", {}),
-            "transfers": rt.TRANSFERS.snapshot()}
+    all derive from this one shape.  A loadgen run attaches its
+    :class:`~repro.runtime.LoadReport` under ``"loadgen"`` — the shape
+    the CI serving smoke validates (p50/p99 present, zero unresolved)."""
+    doc = {"metrics": srv.metrics.snapshot(),
+           "jit": getattr(srv, "jit_attribution", {}),
+           "transfers": rt.TRANSFERS.snapshot()}
+    if loadgen is not None:
+        doc["loadgen"] = loadgen.as_dict()
+    return doc
+
+
+def loadgen_pool(work, oracle: bool = True):
+    """:class:`~repro.runtime.WorkItem` pool from ``build_workload``
+    output.  With ``oracle=True`` each item carries the full expected
+    gmem from one sequential ``run_grid`` call — the load generator then
+    bit-checks every completed launch against it (and the run doubles
+    as a jit warm-up, so loadgen latencies measure serving, not
+    tracing)."""
+    pool = []
+    for name, mod, n, code, (grid, bd), g0 in work:
+        exp = None
+        if oracle:
+            exp = np.asarray(
+                scheduler.run_grid(code, grid, bd, g0.copy()).gmem,
+                np.int64)
+        pool.append(rt.WorkItem(
+            name=f"{name}-{n}", code=code, grid=grid, block_dim=bd,
+            gmem=np.asarray(g0, np.int32), expected_gmem=exp))
+    return pool
+
+
+def parse_sla(pairs):
+    """``tenant=weight`` strings -> weights dict (argparse helper)."""
+    weights = {}
+    for p in pairs or ():
+        try:
+            tenant, w = p.split("=", 1)
+            weights[tenant] = float(w)
+        except ValueError:
+            raise SystemExit(f"--sla expects tenant=weight, got {p!r}")
+    return weights
+
+
+def build_tenants(n: int, rate_hz: float, weights=None, bursty=False,
+                  deadline_s=None):
+    """The CLI's tenant set: ``tenant0..tenantN-1`` sharing ``rate_hz``
+    equally; with ``bursty`` every other tenant becomes ON-OFF at the
+    same time-averaged rate (so the aggregate offered load is
+    unchanged, only its burstiness)."""
+    weights = weights or {}
+    tenants = []
+    for i in range(n):
+        name = f"tenant{i}"
+        onoff = bursty and i % 2 == 1
+        # ON-OFF at 4x during the ON quarter of each cycle == the same
+        # average rate as the Poisson tenants
+        tenants.append(rt.TenantSpec(
+            name, rate_hz=(4.0 if onoff else 1.0) * rate_hz / n,
+            process="onoff" if onoff else "poisson",
+            weight=float(weights.get(name, 1.0)),
+            deadline_s=deadline_s, on_s=0.1, off_s=0.3))
+    return tenants
+
+
+def serve_loadgen(work, args):
+    """The ``--loop --loadgen`` path: a ServingLoop over a fresh server,
+    driven by the seeded open-loop (or closed-loop) generator.  Returns
+    ``(srv, report)``; every completed launch is oracle-checked inside
+    the generator (``report.mismatched`` must be 0)."""
+    import jax
+    jax.clear_caches()
+    weights = parse_sla(args.sla)
+    policy = rt.SlaDrain(weights) if weights else args.policy
+    srv = rt.RuntimeServer(n_sm=args.n_sm, policy=policy,
+                           max_window_cycles=args.max_window_cycles,
+                           resident_gmem=args.resident_gmem,
+                           metrics=obs.MetricsRegistry(),
+                           shard_sm=args.shard_sm)
+    jit_before = obs.jit_summary()
+    pool = loadgen_pool(work)
+    tenants = build_tenants(args.tenants, args.rate, weights,
+                            bursty=args.bursty,
+                            deadline_s=args.deadline_s)
+    # the loop inherits the server's max_window_cycles by default
+    loop = rt.ServingLoop(srv)
+    with loop:
+        if args.loadgen_mode == "closed":
+            n_per = max(1, int(args.rate * args.duration_s
+                               / max(args.tenants, 1)))
+            report = rt.run_closed_loop(loop, pool, tenants, n_per,
+                                        seed=args.seed)
+        else:
+            arrivals = rt.build_arrivals(tenants, args.duration_s,
+                                         len(pool), seed=args.seed)
+            report = rt.run_open_loop(loop, pool, arrivals,
+                                      time_scale=args.time_scale)
+    srv.jit_attribution = obs.jit_delta(jit_before, obs.jit_summary())
+    return srv, report
+
+
+def print_load_report(report) -> None:
+    print(f"[loadgen] mode={report.mode}: {report.submitted} submitted / "
+          f"{report.completed} completed / {report.rejected} rejected / "
+          f"{report.shed} shed / {report.failed} failed / "
+          f"{report.unresolved} unresolved / "
+          f"{report.mismatched} mismatched in {report.duration_s:.2f}s "
+          f"({report.throughput_per_s:.2f} launches/s)")
+    print(f"[loadgen] latency p50 {report.p50_ms:.1f} ms / "
+          f"p99 {report.p99_ms:.1f} ms; loop "
+          f"{report.loop_iterations} iterations, "
+          f"{report.loop_window_errors} window errors")
+    for t in sorted(report.tenants):
+        tr = report.tenants[t]
+        print(f"[loadgen]   {t}: {tr.completed}/{tr.submitted} ok "
+              f"(shed {tr.shed}, rejected {tr.rejected}), p50 "
+              f"{tr.p50_ms:.1f} ms, p99 {tr.p99_ms:.1f} ms, "
+              f"{tr.throughput_per_s:.2f}/s, cycle share "
+              f"{tr.cycle_share:.3f}")
+
+
+def serve_loop(work, args):
+    """The ``--loop`` (no loadgen) path: submit the whole workload as a
+    burst through a running ServingLoop, quiesce, oracle-check every
+    future.  Returns ``(srv, n_completed, wall_s)``."""
+    import jax
+    jax.clear_caches()
+    srv = rt.RuntimeServer(n_sm=args.n_sm, policy=args.policy,
+                           max_window_cycles=args.max_window_cycles,
+                           resident_gmem=args.resident_gmem,
+                           metrics=obs.MetricsRegistry(),
+                           shard_sm=args.shard_sm)
+    futs = []
+    t0 = time.perf_counter()
+    with rt.ServingLoop(srv) as loop:
+        for i, (name, mod, n, code, (grid, bd), g0) in enumerate(work):
+            fut = loop.submit(code, grid, bd, g0.copy(),
+                              client=f"tenant{i % args.tenants}")
+            futs.append((fut, mod, n, g0))
+        loop.quiesce()
+    wall = time.perf_counter() - t0
+    for fut, mod, n, g0 in futs:
+        np.testing.assert_array_equal(
+            np.asarray(fut.result().gmem)[mod.out_slice(n)],
+            mod.oracle(g0, n))
+    return srv, len(futs), wall
 
 
 def print_stats(srv, stats, wall: float, n_sm: int, tenants: int) -> None:
@@ -321,10 +470,49 @@ def main(argv=None):
                     help="dump the metrics document (registry snapshot "
                          "+ jit attribution + transfer counters) as "
                          "JSON to PATH")
+    ap.add_argument("--loop", action="store_true",
+                    help="serve through a background ServingLoop "
+                         "(continuous drain) instead of one explicit "
+                         "drain call; every future oracle-checked")
+    ap.add_argument("--loadgen", action="store_true",
+                    help="drive the loop with the seeded open-loop load"
+                         " generator (implies --loop); see docs/"
+                         "serving.md for the report schema")
+    ap.add_argument("--duration-s", type=float, default=5.0,
+                    help="loadgen schedule length in seconds")
+    ap.add_argument("--rate", type=float, default=50.0,
+                    help="aggregate loadgen arrival rate (launches/s) "
+                         "split equally across tenants")
+    ap.add_argument("--loadgen-mode", choices=("open", "closed"),
+                    default="open",
+                    help="open: seeded arrival schedule, no "
+                         "coordination with completions; closed: one "
+                         "outstanding launch per tenant (capacity "
+                         "calibration)")
+    ap.add_argument("--time-scale", type=float, default=1.0,
+                    help="stretch (>1) or compress (<1, 0=burst) the "
+                         "open-loop schedule's real-time pacing")
+    ap.add_argument("--sla", action="append", metavar="TENANT=WEIGHT",
+                    help="per-tenant SLA weight (repeatable); any "
+                         "--sla switches the drain policy to SlaDrain "
+                         "(weighted fair queueing in predicted "
+                         "SM-cycles)")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-launch latency budget for every loadgen "
+                         "tenant: launches still queued past it are "
+                         "shed with DeadlineExceeded")
+    ap.add_argument("--bursty", action="store_true",
+                    help="make every other loadgen tenant ON-OFF "
+                         "(bursts at 4x rate for a quarter duty cycle)")
     args = ap.parse_args(argv)
 
     if args.skewed and args.longtail:
         ap.error("--skewed and --longtail are mutually exclusive")
+    if args.loadgen:
+        args.loop = True
+    if args.sla and not args.loadgen:
+        ap.error("--sla requires --loadgen (tenant names are the "
+                 "loadgen's tenant0..N-1)")
     if args.skewed:
         work = build_skewed_workload(max(1, args.launches - 1), args.seed)
     elif args.longtail:
@@ -341,12 +529,19 @@ def main(argv=None):
 
     if args.trace_out:
         obs.TRACER.start()
+    stats = report = None
     try:
-        srv, stats, wall = drain_workload(work, args.n_sm, args.tenants,
-                                          args.policy,
-                                          args.max_window_cycles,
-                                          resident=args.resident_gmem,
-                                          shard_sm=args.shard_sm)
+        if args.loadgen:
+            srv, report = serve_loadgen(work, args)
+        elif args.loop:
+            srv, n_done, wall = serve_loop(work, args)
+        else:
+            srv, stats, wall = drain_workload(work, args.n_sm,
+                                              args.tenants,
+                                              args.policy,
+                                              args.max_window_cycles,
+                                              resident=args.resident_gmem,
+                                              shard_sm=args.shard_sm)
     finally:
         if args.trace_out:
             obs.TRACER.stop()
@@ -354,17 +549,27 @@ def main(argv=None):
         doc = obs.TRACER.export(args.trace_out)
         print(f"[serve] wrote {len(doc['traceEvents'])} trace events "
               f"to {args.trace_out}")
-    print_stats(srv, stats, wall, args.n_sm, args.tenants)
+    if args.loadgen:
+        print_load_report(report)
+    elif args.loop:
+        print(f"[serve] loop: {n_done} launches served in {wall:.2f}s "
+              f"({n_done / max(wall, 1e-9):.2f} launches/s), all "
+              "oracle-checked")
+        print(obs.render_snapshot(
+            {"gauges": srv.metrics.snapshot()["gauges"]},
+            prefix="[serve]   "))
+    else:
+        print_stats(srv, stats, wall, args.n_sm, args.tenants)
     if args.metrics:
         print(obs.render_snapshot(srv.metrics.snapshot(),
                                   prefix="[metrics] "))
     if args.metrics_out:
         with open(args.metrics_out, "w") as f:
-            json.dump(metrics_document(srv), f, indent=1)
+            json.dump(metrics_document(srv, loadgen=report), f, indent=1)
         print(f"[serve] wrote metrics snapshot to {args.metrics_out}")
-    if t_seq is not None:
+    if t_seq is not None and not args.loop:
         print(f"[serve] throughput vs sequential: {t_seq / wall:.2f}x")
-    return stats
+    return report if args.loadgen else stats
 
 
 if __name__ == "__main__":

@@ -148,17 +148,21 @@ class Tracer:
         return Span(self, name, attrs)
 
     def timed_span(self, name: str, t0_s: float, t1_s: float,
-                   **attrs) -> None:
+                   root: bool = False, **attrs) -> None:
         """Attach an already-measured interval (wall perf_counter
         seconds) as a closed child of the current span — used for
         retroactive phases like per-launch queue-wait, whose start
-        predates the drain's own spans."""
+        predates the drain's own spans.  ``root=True`` attaches at the
+        top level instead: the caller knows the interval overlaps
+        *sibling* scopes (e.g. a queue wait spanning an earlier partial
+        drain), so nesting it under the current span would mis-parent
+        it."""
         if not self.enabled:
             return
         sp = Span(self, name, attrs)
         sp.t0 = t0_s - self._t0
         sp.t1 = t1_s - self._t0
-        (self._stack[-1].children if self._stack else
+        (self._stack[-1].children if self._stack and not root else
          self.roots).append(sp)
 
     def begin_async(self, cat: str, id_, name: str, **attrs) -> None:

@@ -31,7 +31,13 @@ resident machine handles many tenants' binaries back-to-back:
 * :mod:`server`  — the multi-tenant launch queue draining policy-cut
   windows into SM-packed dispatch groups, topologically ordered over
   per-stream dependency edges (a dependent launch drains after its
-  producer without flushing the server).
+  producer without flushing the server);
+* :mod:`service` — always-on serving: :class:`ServingLoop`, a
+  background continuous drain loop with per-window latency bounds,
+  crash isolation and exact quiesce (see ``docs/serving.md``);
+* :mod:`loadgen` — seeded open-loop load generation (Poisson + bursty
+  ON-OFF tenants) and closed-loop calibration, reporting per-tenant
+  latency/throughput from the server's observability histograms.
 
 ``repro.core.scheduler.run_grid`` is a thin compatibility wrapper over
 :func:`executor.run_grid`, so every pre-runtime benchmark and test
@@ -54,23 +60,32 @@ from .executor import (BLOCK_SCHED_OVERHEAD, LAUNCH_BUCKETS, TRANSFERS,
 from .stream import (Event, Launch, QueuedLaunch, QueuedStream, Runtime,
                      Stream)
 from .policy import (POLICIES, AdmissionError, BalancedDrain, BucketDrain,
-                     BucketStats, DrainPolicy, FairBucketDrain,
-                     MonolithicDrain, TenantStats, make_policy)
+                     BucketStats, DeadlineExceeded, DrainPolicy,
+                     FairBucketDrain, MonolithicDrain, SlaDrain, TenantStats,
+                     make_policy)
 from .server import DepGmem, DrainStats, LaunchRequest, RuntimeServer
+from .service import ServingLoop
+from .loadgen import (Arrival, LoadReport, TenantReport, TenantSpec,
+                      WorkItem, build_arrivals, run_closed_loop,
+                      run_open_loop)
 from ..obs import METRICS, TRACER, MetricsRegistry, Tracer
 
 __all__ = [
-    "AdmissionError", "BLOCK_SCHED_OVERHEAD", "BalancedDrain",
+    "AdmissionError", "Arrival", "BLOCK_SCHED_OVERHEAD", "BalancedDrain",
     "BucketDrain", "BucketStats", "CODE_BUCKETS", "CostEstimate",
-    "CostModel", "DepGmem", "DeviceGrid", "DrainPolicy", "DrainStats",
+    "CostModel", "DeadlineExceeded", "DepGmem", "DeviceGrid",
+    "DrainPolicy", "DrainStats",
     "Event", "FairBucketDrain", "Footprint", "GMEM_MIN_WORDS", "GmemPool",
     "GridResult", "Launch", "LaunchRequest", "LaunchSpec",
-    "LAUNCH_BUCKETS", "MonolithicDrain", "Module", "ModuleRegistry",
-    "METRICS", "MetricsRegistry",
+    "LAUNCH_BUCKETS", "LoadReport", "MonolithicDrain", "Module",
+    "ModuleRegistry", "METRICS", "MetricsRegistry",
     "MultiSMReport", "POLICIES", "QueuedLaunch", "QueuedStream", "Runtime",
-    "RuntimeServer", "SEED_CYCLES_PER_INSTR", "Stream", "TRACER",
-    "TRANSFERS", "TenantStats", "Tracer", "TransferLog",
-    "WARP_BUCKETS", "bucket_code_len", "bucket_gmem_len",
-    "bucket_launches", "bucket_warps", "execute", "footprint",
-    "make_policy", "pad_code", "run_grid", "shard_plan",
+    "RuntimeServer", "SEED_CYCLES_PER_INSTR", "ServingLoop", "SlaDrain",
+    "Stream", "TRACER",
+    "TRANSFERS", "TenantReport", "TenantSpec", "TenantStats", "Tracer",
+    "TransferLog", "WARP_BUCKETS", "WorkItem", "bucket_code_len",
+    "bucket_gmem_len",
+    "bucket_launches", "bucket_warps", "build_arrivals", "execute",
+    "footprint", "make_policy", "pad_code", "run_closed_loop",
+    "run_grid", "run_open_loop", "shard_plan",
 ]

@@ -25,6 +25,12 @@ This module makes that cut pluggable:
   bin-packing realized through the executor's position-major
   round-robin, so one long sub-batch no longer serializes a drain
   window behind short ones.
+* :class:`SlaDrain` — FairBucketDrain with per-tenant SLA *weights*
+  expressed in predicted SM-cycles (weighted fair queueing over the
+  CostModel): under bounded windows each backlogged tenant's share of
+  device time tracks its weight, and integer priorities arrange
+  strictly first.  The policy the always-on :class:`ServingLoop`
+  serves under (see ``docs/serving.md``).
 
 All policies are functionally interchangeable: launches own disjoint
 memories, so every ticket's result is bit-exact with a sequential
@@ -38,7 +44,7 @@ per-tenant / per-bucket accounting records surfaced through
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, NamedTuple, Sequence, Union
+from typing import Dict, List, NamedTuple, Optional, Sequence, Union
 
 from ..obs import safe_div
 from . import registry as reg
@@ -52,6 +58,16 @@ class AdmissionError(RuntimeError):
     resubmit; nothing was enqueued."""
 
 
+class DeadlineExceeded(RuntimeError):
+    """A launch admitted with ``submit(deadline_s=...)`` was still
+    queued when its deadline expired: the server *sheds* it at dequeue
+    time instead of executing stale work.  Distinct from
+    :class:`AdmissionError` (nothing was ever enqueued) and from a drop
+    (the launch failed while executing): a shed launch never reached
+    the device.  Its future fails with this error and the shed is
+    counted in ``server.shed`` / per-tenant ``TenantStats.shed``."""
+
+
 @dataclasses.dataclass
 class TenantStats:
     """Cumulative per-tenant serving accounting."""
@@ -61,6 +77,10 @@ class TenantStats:
     padded_gmem_words: int = 0  # bucket padding its allocations carried
     rejected: int = 0           # submissions bounced by admission control
     dropped: int = 0            # launches dropped after MAX_ATTEMPTS
+    shed: int = 0               # launches shed past their deadline
+    sm_cycles: int = 0          # observed device cycles the tenant's
+    #                             completed blocks executed (the share
+    #                             SlaDrain's SLA weights are judged on)
 
 
 @dataclasses.dataclass
@@ -138,6 +158,11 @@ class DrainPolicy:
     """
 
     name = "base"
+
+    def bind(self, registry: ModuleRegistry) -> None:
+        """Attach the server's registry (called once at server
+        construction).  Base policies don't need it; cost-aware arrange
+        policies (:class:`SlaDrain`) use it for duration predictions."""
 
     def arrange(self, pending: List) -> List:
         return list(pending)
@@ -265,10 +290,93 @@ class BalancedDrain(DrainPolicy):
         return [sb for _, sb in subs]
 
 
+class SlaDrain(FairBucketDrain):
+    """FairBucketDrain with per-tenant SLA *weights* in predicted
+    SM-cycles: weighted fair queueing over the CostModel.
+
+    ``FairBucketDrain`` interleaves one *launch* per tenant per cycle —
+    fair in launch count, not in device time: a tenant submitting 256-
+    block transposes gets the same slot cadence as one submitting
+    single-block reductions.  This policy arranges by **virtual time**
+    instead: each tenant accrues ``predicted_cycles / weight`` per
+    launch picked (predictions from the registry's
+    :class:`~repro.runtime.registry.CostModel`, bound via
+    :meth:`bind`), and the queue is rebuilt by repeatedly taking the
+    head launch of the lowest-virtual-time tenant.  Under bounded
+    windows (``max_batch`` / ``max_window_cycles``) the drained prefix
+    then gives each backlogged tenant a share of predicted SM-cycles
+    proportional to its weight — weight 3 buys 3x the device time of
+    weight 1, whatever the per-launch geometry mix.
+
+    Virtual time restarts at zero each ``arrange`` (every drain re-
+    arranges the whole queue), so requeued launches are never double-
+    charged and an idle tenant never banks unbounded credit.  Requests
+    carry an integer ``priority`` (``submit(priority=)``): higher
+    priorities are arranged strictly first, weighted-fair *within* each
+    priority tier.  Unknown tenants get ``default_weight``.  Partition
+    is inherited from BucketDrain, so dispatch groups stay
+    (gmem bucket, binary)-keyed and results remain bit-exact with the
+    sequential oracle like every other policy.
+    """
+
+    name = "sla"
+
+    def __init__(self, weights: Optional[Dict[str, float]] = None,
+                 default_weight: float = 1.0):
+        self.weights = dict(weights or {})
+        self.default_weight = float(default_weight)
+        self._registry: Optional[ModuleRegistry] = None
+
+    def bind(self, registry: ModuleRegistry) -> None:
+        self._registry = registry
+
+    def weight(self, client: str) -> float:
+        """Effective (floored) weight of one tenant — a zero/negative
+        configured weight degrades to best-effort, never a crash."""
+        return max(float(self.weights.get(client, self.default_weight)),
+                   1e-9)
+
+    def _cost(self, request) -> float:
+        """Predicted SM-cycles of one request; block count alone when
+        no registry is bound (still geometry-aware, never constant)."""
+        if self._registry is not None:
+            return max(request_duration(request, self._registry), 1e-9)
+        gx, gy = request.spec.grid
+        return float(gx * gy)
+
+    def arrange(self, pending):
+        if not pending:
+            return []
+        tiers: Dict[int, Dict[str, List]] = {}
+        for r in pending:
+            prio = int(getattr(r, "priority", 0))
+            tiers.setdefault(prio, {}).setdefault(r.client, []).append(r)
+        out: List = []
+        for prio in sorted(tiers, reverse=True):
+            by_client = tiers[prio]
+            # deterministic tenant order: first submission in this tier
+            order = sorted(by_client,
+                           key=lambda c: by_client[c][0].ticket)
+            vtime = {c: 0.0 for c in order}
+            while by_client:
+                c = min((c for c in order if c in by_client),
+                        key=lambda c: vtime[c])
+                q = by_client[c]
+                r = q.pop(0)
+                out.append(r)
+                vtime[c] += self._cost(r) / self.weight(c)
+                if not q:
+                    del by_client[c]
+        return out
+
+    def __repr__(self):
+        return f"SlaDrain(weights={self.weights!r})"
+
+
 #: CLI / constructor lookup: ``RuntimeServer(policy="bucket")``.
 POLICIES = {p.name: p for p in
             (MonolithicDrain, BucketDrain, FairBucketDrain,
-             BalancedDrain)}
+             BalancedDrain, SlaDrain)}
 
 
 def make_policy(policy: Union[str, DrainPolicy, None]) -> DrainPolicy:

@@ -40,7 +40,8 @@ from ..core.pipeline import MachineConfig
 from ..obs import METRICS, TRACER, MetricsRegistry, Tracer, safe_div
 from . import executor as ex
 from . import policy as pol
-from .policy import AdmissionError, BucketStats, DrainPolicy, TenantStats
+from .policy import (AdmissionError, BucketStats, DeadlineExceeded,
+                     DrainPolicy, TenantStats)
 from .registry import GmemPool, ModuleRegistry
 from .stream import QueuedLaunch, QueuedStream
 
@@ -67,6 +68,11 @@ class LaunchRequest(NamedTuple):
     client: str
     spec: ex.LaunchSpec
     attempts: int = 0     # failed drain attempts so far
+    #: absolute host deadline (perf_counter seconds) or None; a request
+    #: still queued past it is *shed* at dequeue time (DeadlineExceeded)
+    deadline: Optional[float] = None
+    #: scheduling priority — higher arranges first under SlaDrain
+    priority: int = 0
 
     @property
     def deps(self):
@@ -94,6 +100,7 @@ class DrainStats(NamedTuple):
     busy_cycles: int = 0         # sum over sub-batches and SMs of real work
     pool: Optional[Dict[str, int]] = None   # GmemPool.stats() snapshot
     n_devices: int = 1           # devices the SM axis sharded over
+    n_shed: int = 0              # launches shed past their deadline
 
     @property
     def device_cycles(self) -> np.ndarray:
@@ -134,15 +141,20 @@ class _LaunchTiming:
 
     Feeds the server's latency histograms: total = complete − submit,
     queue-wait = packed − submit, device = complete − dispatched (the
-    sub-batch's execute+materialize extent).  Popped at resolution or
-    drop; purely host-side."""
+    sub-batch's execute+materialize extent).  Popped at resolution,
+    shed or drop; purely host-side.  ``deferred`` marks a launch a
+    partial drain (``max_windows=``) returned to the queue unpacked:
+    its retroactive queue-wait span then overlaps that whole earlier
+    drain, so the stamp at dequeue time attaches it at the trace root
+    instead of nesting it inside a later drain's window."""
 
-    __slots__ = ("submit", "packed", "dispatched")
+    __slots__ = ("submit", "packed", "dispatched", "deferred")
 
     def __init__(self, submit: float) -> None:
         self.submit = submit
         self.packed: Optional[float] = None
         self.dispatched: Optional[float] = None
+        self.deferred = False
 
 
 class RuntimeServer:
@@ -196,6 +208,13 @@ class RuntimeServer:
         self.max_window_cycles = max_window_cycles
         self.registry = registry or ModuleRegistry(max_modules=1024)
         self.policy = pol.make_policy(policy)
+        # cost-aware arrange policies (SlaDrain) predict durations
+        # through the server's own cost model
+        self.policy.bind(self.registry)
+        #: set by a :class:`~repro.runtime.service.ServingLoop` while it
+        #: owns this server's drains; futures then wait for the loop
+        #: instead of draining re-entrantly from a foreign thread
+        self._serving_loop = None
         self.max_pending = max_pending
         self.max_inflight_per_tenant = max_inflight_per_tenant
         self._pending: List[LaunchRequest] = []
@@ -276,7 +295,9 @@ class RuntimeServer:
         return np.asarray(fut.gmem(), np.int32)
 
     def submit(self, code, grid, block_dim, gmem,
-               client: str = "anon") -> int:
+               client: str = "anon",
+               deadline_s: Optional[float] = None,
+               priority: int = 0) -> int:
         """Enqueue one launch; returns a ticket redeemable at ``drain``.
 
         Host arrays are snapshotted — a tenant may reuse its buffer
@@ -290,6 +311,14 @@ class RuntimeServer:
         the door instead of poisoning a later ``drain`` window shared
         with other tenants; admission control (bounded queue, per-tenant
         cap) rejects with :class:`AdmissionError`.
+
+        ``deadline_s`` is a latency budget relative to now: a launch
+        still queued when it expires is **shed** at dequeue time — its
+        future fails with :class:`~repro.runtime.policy.DeadlineExceeded`
+        and the shed lands in ``server.shed`` counters — instead of
+        executing stale work under overload.  ``priority`` (higher
+        first) orders arrangement under priority-aware policies
+        (:class:`~repro.runtime.policy.SlaDrain`).
         """
         with self.tracer.span("submit", tenant=client) as sp:
             gx, gy = grid
@@ -335,8 +364,11 @@ class RuntimeServer:
             mod = self.registry.as_module(code)
             ticket = self._next_ticket
             self._next_ticket += 1
+            deadline = None if deadline_s is None else \
+                time.perf_counter() + float(deadline_s)
             self._pending.append(LaunchRequest(
-                ticket, client, ex.LaunchSpec(mod, grid, block_dim, gmem)))
+                ticket, client, ex.LaunchSpec(mod, grid, block_dim, gmem),
+                deadline=deadline, priority=int(priority)))
             if isinstance(gmem, DepGmem):
                 self._dep_waiters[gmem.ticket] = \
                     self._dep_waiters.get(gmem.ticket, 0) + 1
@@ -351,12 +383,15 @@ class RuntimeServer:
         return ticket
 
     def submit_future(self, code, grid, block_dim, gmem,
-                      client: str = "anon") -> QueuedLaunch:
+                      client: str = "anon",
+                      deadline_s: Optional[float] = None,
+                      priority: int = 0) -> QueuedLaunch:
         """``submit`` returning a :class:`QueuedLaunch` future instead of
         a bare ticket.  The future resolves exactly once, the moment its
         sub-batch completes inside a drain — surviving sub-batched
         completion order and window-mate failures."""
-        ticket = self.submit(code, grid, block_dim, gmem, client)
+        ticket = self.submit(code, grid, block_dim, gmem, client,
+                             deadline_s=deadline_s, priority=priority)
         mod = self._pending[-1].spec.code    # submit stored the Module
         fut = QueuedLaunch(self, ticket, client, mod, grid, block_dim)
         self._futures[ticket] = fut
@@ -378,7 +413,8 @@ class RuntimeServer:
 
     def _pack_window(self, queue: List[LaunchRequest],
                      max_window_cycles=_INHERIT
-                     ) -> List[LaunchRequest]:
+                     ) -> Tuple[List[LaunchRequest],
+                                List[LaunchRequest]]:
         """Pop the next window off ``queue``: bounded by the launch
         bucket (max_batch), the executor's exact-cycle block budget —
         so a full window of individually-valid launches can never trip
@@ -390,12 +426,22 @@ class RuntimeServer:
         stops before the window's predicted block-cycles exceed the
         budget.  The first launch always packs (a single over-budget
         launch must still drain), so the budget bounds window *latency*
-        without ever starving the queue."""
+        without ever starving the queue.
+
+        Returns ``(window, shed)``: a request whose ``deadline``
+        already expired at dequeue time is popped into ``shed``
+        instead of the window — it consumes no window budget and
+        never reaches the device (the caller fails it with
+        :class:`DeadlineExceeded`)."""
         budget = self.max_window_cycles if max_window_cycles is _INHERIT \
             else max_window_cycles
-        window, blocks_packed, cycles_packed = [], 0, 0.0
+        window, shed, blocks_packed, cycles_packed = [], [], 0, 0.0
+        now = time.perf_counter()
         while queue and len(window) < self.max_batch:
             nxt = queue[0]
+            if nxt.deadline is not None and now > nxt.deadline:
+                shed.append(queue.pop(0))
+                continue
             nb = nxt.spec.grid[0] * nxt.spec.grid[1]
             if window and blocks_packed + nb > self.block_budget():
                 break
@@ -406,7 +452,7 @@ class RuntimeServer:
                 cycles_packed += dur
             window.append(queue.pop(0))
             blocks_packed += nb
-        return window
+        return window, shed
 
     def _cut(self, window: List[LaunchRequest]) -> List[pol.SubBatch]:
         """Policy partition, with retried requests isolated first: a
@@ -511,6 +557,34 @@ class RuntimeServer:
             self._dep_waiters.pop(ticket, None)
             self.gmem_pool.release(ticket)
             self._dep_dropped.discard(ticket)
+
+    def _shed(self, r: LaunchRequest, now: float) -> None:
+        """Shed one deadline-expired request at dequeue time: fail its
+        future with :class:`DeadlineExceeded`, close its launch
+        lifecycle trace pair, and account it (``server.shed`` counters,
+        per-tenant ``TenantStats.shed``).  A shed producer's queued
+        dependents fail at their own dequeue via the ``_dep_dropped``
+        marker — their memory can now never materialize."""
+        tm = self._timings.pop(r.ticket, None)
+        waited = now - tm.submit if tm is not None else 0.0
+        err = DeadlineExceeded(
+            f"launch ticket {r.ticket} (tenant {r.client!r}) shed after "
+            f"{waited:.4f}s in queue: deadline expired before dispatch")
+        ts = self.tenant_stats.setdefault(r.client, TenantStats())
+        ts.shed += 1
+        self.metrics.counter("server.shed").inc()
+        self.metrics.counter(f"server.shed.{r.client}").inc()
+        # the lifecycle pair still closes — a trace of an overloaded
+        # serving loop shows every launch terminated, some shed
+        self.tracer.end_async("launch", r.ticket,
+                              shed=True, error=str(err))
+        fut = self._futures.pop(r.ticket, None)
+        if fut is not None:
+            fut._fail(err)
+        if r.ticket in self._dep_waiters:
+            self._dep_dropped.add(r.ticket)
+        for d in r.deps:
+            self._dep_done(d)
 
     def _drop(self, r: LaunchRequest, error: BaseException,
               queue: List[LaunchRequest],
@@ -634,7 +708,7 @@ class RuntimeServer:
         results, self._completed = self._completed, {}
         per_sm = np.zeros(self.n_sm, np.int64)
         n_blocks = n_steps = n_launches = 0
-        n_windows = n_sub_batches = 0
+        n_windows = n_sub_batches = n_shed = 0
         useful_words = padded_words = sm_slots = 0
         makespan = busy = 0
         by_tenant: Dict[str, TenantStats] = {}
@@ -650,16 +724,24 @@ class RuntimeServer:
           while queue and (max_windows is None or n_windows < max_windows):
             with self.tracer.span("window", index=n_windows) as win_sp:
               with self.tracer.span("pack"):
-                window = self._pack_window(queue, max_window_cycles)
+                window, shed = self._pack_window(queue, max_window_cycles)
               n_windows += 1
-              win_sp.set(n_launches=len(window))
               t_pack = time.perf_counter()
+              for r in shed:
+                  self._shed(r, t_pack)
+              n_shed += len(shed)
+              win_sp.set(n_launches=len(window), n_shed=len(shed))
               for r in window:
                   tm = self._timings.get(r.ticket)
                   if tm is not None and tm.packed is None:
                       tm.packed = t_pack
+                      # stamped at dequeue time; a launch deferred by an
+                      # earlier partial drain gets a ROOT span — its
+                      # wait overlaps that whole drain, so nesting it
+                      # inside THIS drain's window would mis-parent it
                       self.tracer.timed_span(
                           "queue-wait", tm.submit, t_pack,
+                          root=tm.deferred,
                           ticket=r.ticket, tenant=r.client)
               for sb in self._topo_order(self._cut(window)):
                 # materialize dependent launches' memories from their
@@ -757,16 +839,25 @@ class RuntimeServer:
                             h = self.metrics.histogram
                             h("server.latency_s").record(
                                 t_done - tm.submit)
+                            h(f"server.latency_s.{req.client}").record(
+                                t_done - tm.submit)
                             if tm.packed is not None:
                                 h("server.queue_wait_s").record(
                                     tm.packed - tm.submit)
                             if tm.dispatched is not None:
                                 h("server.device_s").record(
                                     t_done - tm.dispatched)
+                        cyc = int(np.asarray(res.cycles_per_block,
+                                             np.int64).sum())
+                        # observed per-tenant device time — the share
+                        # SlaDrain's SLA weights are judged on
+                        for ts in (by_tenant.setdefault(
+                                       req.client, TenantStats()),
+                                   self.tenant_stats.setdefault(
+                                       req.client, TenantStats())):
+                            ts.sm_cycles += cyc
                         self.tracer.end_async(
-                            "launch", req.ticket, observed_cycles=int(
-                                np.asarray(res.cycles_per_block,
-                                           np.int64).sum()))
+                            "launch", req.ticket, observed_cycles=cyc)
                 rep = dg.report()
                 disp_sp.set(observed_cycles=rep.kernel_cycles)
                 per_sm += rep.per_sm_cycles
@@ -783,6 +874,12 @@ class RuntimeServer:
         # anything not drained this call (window bound or failures) goes
         # back on the queue: unprocessed arrivals first, retries at tail
         self._pending = queue + requeue
+        for r in queue:
+            tm = self._timings.get(r.ticket)
+            if tm is not None and tm.packed is None:
+                # survived a partial drain unpacked: its eventual
+                # queue-wait span overlaps this drain — parent at root
+                tm.deferred = True
         if first_error is not None:
             self._completed.update(results)
             raise first_error
@@ -797,9 +894,10 @@ class RuntimeServer:
             occupancy=safe_div(n_blocks, sm_slots),
             by_tenant=by_tenant, by_bucket=by_bucket,
             makespan_cycles=makespan, busy_cycles=busy,
-            pool=self.gmem_pool.stats(), n_devices=self.n_devices)
+            pool=self.gmem_pool.stats(), n_devices=self.n_devices,
+            n_shed=n_shed)
         drain_sp.set(n_launches=n_launches, n_windows=n_windows,
-                     wall_s=round(wall, 6))
+                     n_shed=n_shed, wall_s=round(wall, 6))
         self._publish_drain(stats)
         return results, stats
 
@@ -817,6 +915,7 @@ class RuntimeServer:
         g("drain.n_blocks").set(stats.n_blocks)
         g("drain.n_windows").set(stats.n_windows)
         g("drain.n_sub_batches").set(stats.n_sub_batches)
+        g("drain.n_shed").set(stats.n_shed)
         g("drain.wall_s").set(round(stats.wall_s, 6))
         g("drain.launches_per_s").set(round(stats.launches_per_s, 3))
         g("drain.occupancy").set(round(stats.occupancy, 6))
@@ -833,6 +932,7 @@ class RuntimeServer:
         for t, ts in (stats.by_tenant or {}).items():
             g(f"drain.tenant.{t}.launches").set(ts.launches)
             g(f"drain.tenant.{t}.blocks").set(ts.blocks)
+            g(f"drain.tenant.{t}.sm_cycles").set(ts.sm_cycles)
             g(f"drain.tenant.{t}.useful_gmem_words").set(
                 ts.useful_gmem_words)
             g(f"drain.tenant.{t}.padded_gmem_words").set(

@@ -225,17 +225,25 @@ class QueuedLaunch:
         return self._resolved
 
     def result(self) -> ex.GridResult:
-        """The launch's :class:`GridResult`; drains the server if needed."""
+        """The launch's :class:`GridResult`; drains the server if needed.
+
+        When a :class:`~repro.runtime.service.ServingLoop` owns the
+        server, the future must not drain from this (foreign) thread —
+        it waits for the loop to resolve it instead."""
         if not self._resolved:
-            with TRACER.span("future-wait", ticket=self.ticket,
-                             tenant=self.client):
-                try:
-                    self._server.drain()
-                except Exception:
-                    # another sub-batch of the drain failed — only
-                    # propagate if *our* sub-batch did not complete
-                    if not self._resolved:
-                        raise
+            loop = getattr(self._server, "_serving_loop", None)
+            if loop is not None and loop.running:
+                loop.wait_for(self)
+            else:
+                with TRACER.span("future-wait", ticket=self.ticket,
+                                 tenant=self.client):
+                    try:
+                        self._server.drain()
+                    except Exception:
+                        # another sub-batch of the drain failed — only
+                        # propagate if *our* sub-batch did not complete
+                        if not self._resolved:
+                            raise
         if self._error is not None:
             raise self._error
         if self._result is None:

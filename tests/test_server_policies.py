@@ -31,7 +31,7 @@ try:
 except ImportError:          # optional extra: the seeded fuzz still runs
     hypothesis = None
 
-POLICY_NAMES = ("monolithic", "bucket", "fair", "balanced")
+POLICY_NAMES = ("monolithic", "bucket", "fair", "balanced", "sla")
 
 #: fuzz pool: small launches only (1-4 blocks, warps 1-8) so every
 #: bucketed shape is shared with the rest of the suite's jit caches
@@ -382,7 +382,7 @@ def test_window_budget_unused_skips_cost_lookups():
     for _ in range(3):
         srv.submit(code, *launch, g0.copy())
     hits0 = srv.registry.hits + srv.registry.misses
-    window = srv._pack_window(list(srv._pending))
+    window, _shed = srv._pack_window(list(srv._pending))
     assert len(window) == 3
     assert srv.registry.hits + srv.registry.misses == hits0
     srv._pending.clear()
@@ -663,12 +663,13 @@ def test_make_policy_coercion():
     assert isinstance(pol.make_policy(None), pol.BucketDrain)
     assert isinstance(pol.make_policy("monolithic"), pol.MonolithicDrain)
     assert isinstance(pol.make_policy("balanced"), pol.BalancedDrain)
+    assert isinstance(pol.make_policy("sla"), pol.SlaDrain)
     inst = pol.FairBucketDrain()
     assert pol.make_policy(inst) is inst
     with pytest.raises(ValueError, match="unknown drain policy"):
         pol.make_policy("lifo")
     assert sorted(rt.POLICIES) == ["balanced", "bucket", "fair",
-                                   "monolithic"]
+                                   "monolithic", "sla"]
 
 
 def test_footprint_and_warp_buckets():

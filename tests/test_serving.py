@@ -1,0 +1,595 @@
+"""Always-on serving suite: ServingLoop, SLA scheduling, loadgen.
+
+Three layers of acceptance for the serving stack:
+
+* **Functional invisibility** — serving through the background
+  continuous drain loop (burst, seeded open-loop Poisson, bursty
+  ON-OFF) yields results bit-identical to a sequential ``run_grid`` of
+  each launch alone, for every drain policy including ``SlaDrain``.
+* **Scheduling semantics** — SLA weights shape the *order* tenants are
+  served in (observed SM-cycle shares over a bounded window track the
+  weights), priorities form strict tiers, deadline-expired launches are
+  shed at dequeue with a distinct failure, and admission backpressure
+  still applies under the loop.
+* **Operational behaviour** — quiesce means every future resolved; a
+  poisoned window never kills the loop; latency telemetry decomposes
+  consistently (total >= queue + device per sample); every launch —
+  completed, shed or dropped — closes its async trace pair; and
+  queue-wait spans for launches deferred across partial drains parent
+  at the trace root instead of inside a later drain's window.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro import runtime as rt
+from repro.core import scheduler
+from repro.core.programs import ALL
+from repro.runtime import policy as pol
+
+POLICY_NAMES = ("monolithic", "bucket", "fair", "balanced", "sla")
+
+#: small-launch pool (shapes shared with the rest of the suite's jit
+#: caches — mirrors tests/test_server_policies.py)
+_POOL = (("bitonic", 32), ("bitonic", 64), ("autocorr", 32),
+         ("autocorr", 64), ("reduction", 32), ("transpose", 32))
+
+_seq_memo = {}
+
+
+def _sequential(name, n, gseed):
+    """Memoized sequential run_grid oracle for a pool launch."""
+    key = (name, n, gseed)
+    if key not in _seq_memo:
+        mod = ALL[name]
+        code = mod.build(n)
+        g0 = mod.make_gmem(np.random.default_rng(gseed), n)
+        res = scheduler.run_grid(code, *mod.launch(n), g0.copy())
+        _seq_memo[key] = (code, g0, res)
+    return _seq_memo[key]
+
+
+def _assert_bit_identical(got, want):
+    np.testing.assert_array_equal(got.gmem, want.gmem)
+    np.testing.assert_array_equal(got.cycles_per_block,
+                                  want.cycles_per_block)
+    np.testing.assert_array_equal(got.op_issues, want.op_issues)
+    np.testing.assert_array_equal(got.op_lanes, want.op_lanes)
+    assert got.stack_ops == want.stack_ops
+    assert got.max_sp == want.max_sp
+    assert got.overflow == want.overflow
+
+
+def _poison(srv, index=-1):
+    """Corrupt a pending request's gmem behind the validator's back."""
+    srv._pending[index] = srv._pending[index]._replace(
+        spec=srv._pending[index].spec._replace(
+            gmem=srv._pending[index].spec.gmem.reshape(2, -1)))
+
+
+def _pool_items(oracle=True):
+    """WorkItem pool over ``_POOL`` with full expected gmem."""
+    items = []
+    for name, n in _POOL:
+        code, g0, seq = _sequential(name, n, 0)
+        items.append(rt.WorkItem(
+            name=f"{name}-{n}", code=code, grid=ALL[name].launch(n)[0],
+            block_dim=ALL[name].launch(n)[1],
+            gmem=np.asarray(g0, np.int32),
+            expected_gmem=np.asarray(seq.gmem, np.int64)
+            if oracle else None))
+    return items
+
+
+def _bitonic():
+    code, g0, seq = _sequential("bitonic", 32, 0)
+    return code, ALL["bitonic"].launch(32), g0, seq
+
+
+@pytest.fixture
+def tracer():
+    tr = obs.TRACER.start()
+    yield tr
+    tr.stop().clear()
+
+
+# ------------------------------------------------------- loop lifecycle
+
+def test_loop_start_stop_lifecycle():
+    srv = rt.RuntimeServer(n_sm=1, metrics=rt.MetricsRegistry())
+    loop = rt.ServingLoop(srv, poll_interval_s=0.01)
+    assert not loop.running
+    loop.start()
+    assert loop.running
+    assert srv._serving_loop is loop
+    assert srv.metrics.gauge("loop.running").value == 1
+    loop.quiesce()               # empty queue: immediate
+    loop.stop()
+    assert not loop.running
+    assert srv._serving_loop is None
+    assert srv.metrics.gauge("loop.running").value == 0
+    loop.start()                 # restartable after a clean stop
+    loop.stop()
+
+
+def test_loop_double_start_and_ownership():
+    srv = rt.RuntimeServer(n_sm=1)
+    loop = rt.ServingLoop(srv).start()
+    try:
+        with pytest.raises(RuntimeError, match="already running"):
+            loop.start()
+        with pytest.raises(RuntimeError, match="already owned"):
+            rt.ServingLoop(srv).start()
+    finally:
+        loop.stop()
+
+
+def test_loop_context_manager_serves():
+    srv = rt.RuntimeServer(n_sm=2)
+    code, launch, g0, seq = _bitonic()
+    with rt.ServingLoop(srv, poll_interval_s=0.01) as loop:
+        fut = loop.submit(code, *launch, g0.copy(), client="t0")
+        _assert_bit_identical(fut.result(), seq)
+    assert not loop.running
+    assert srv.pending() == 0
+
+
+# --------------------------------------------- bit-exactness vs oracle
+
+def test_loop_burst_bit_exact_vs_sequential():
+    """A burst of mixed launches served by the loop is bit-identical to
+    the sequential oracle — futures resolved by the loop thread."""
+    srv = rt.RuntimeServer(n_sm=2, max_batch=3)
+    with rt.ServingLoop(srv, poll_interval_s=0.01) as loop:
+        futs = []
+        for i, (name, n) in enumerate(_POOL * 2):
+            code, g0, seq = _sequential(name, n, 0)
+            futs.append((loop.submit(code, *ALL[name].launch(n),
+                                     g0.copy(),
+                                     client=f"tenant{i % 3}"), seq))
+        for fut, seq in futs:
+            _assert_bit_identical(fut.result(), seq)
+        loop.quiesce()
+    assert srv.pending() == 0
+    assert srv.launches_served == len(_POOL) * 2
+
+
+@pytest.mark.parametrize("policy", POLICY_NAMES)
+def test_fuzz_loop_bit_exact_all_policies(policy):
+    """Seeded random workloads through the loop, every policy: results
+    bit-identical to sequential run_grid (the test_server_policies fuzz
+    property, now under concurrent serving)."""
+    rng = np.random.default_rng(1000 + POLICY_NAMES.index(policy))
+    srv = rt.RuntimeServer(n_sm=2, policy=policy,
+                           max_batch=int(rng.integers(2, 6)))
+    with rt.ServingLoop(srv, poll_interval_s=0.005) as loop:
+        futs = []
+        for i in range(int(rng.integers(6, 12))):
+            name, n = _POOL[int(rng.integers(len(_POOL)))]
+            gseed = int(rng.integers(4))
+            code, g0, seq = _sequential(name, n, gseed)
+            futs.append((loop.submit(code, *ALL[name].launch(n),
+                                     g0.copy(),
+                                     client=f"t{int(rng.integers(3))}"),
+                         seq))
+        for fut, seq in futs:
+            _assert_bit_identical(fut.result(), seq)
+    assert srv.pending() == 0
+
+
+def test_open_loop_poisson_bit_exact_vs_oracle():
+    """The seeded open-loop Poisson schedule replayed through the loop:
+    deterministic arrival multiset, every completion bit-checked
+    against the sequential oracle by the generator itself."""
+    srv = rt.RuntimeServer(n_sm=2, metrics=rt.MetricsRegistry())
+    pool = _pool_items()
+    tenants = [rt.TenantSpec("alpha", rate_hz=300.0),
+               rt.TenantSpec("beta", rate_hz=200.0)]
+    arrivals = rt.build_arrivals(tenants, duration_s=0.1,
+                                 n_items=len(pool), seed=11)
+    assert arrivals, "seeded schedule must be non-empty"
+    with rt.ServingLoop(srv, poll_interval_s=0.005) as loop:
+        rep = rt.run_open_loop(loop, pool, arrivals, time_scale=0.0)
+    assert rep.submitted == len(arrivals)
+    assert rep.completed == rep.submitted
+    assert rep.unresolved == 0
+    assert rep.mismatched == 0
+    assert rep.shed == rep.failed == rep.rejected == 0
+    # latency quantiles come from the server's histograms
+    assert rep.p50_ms > 0 and rep.p99_ms >= rep.p50_ms
+
+
+def test_open_loop_bursty_onoff_bit_exact():
+    srv = rt.RuntimeServer(n_sm=2, metrics=rt.MetricsRegistry())
+    pool = _pool_items()
+    tenants = [rt.TenantSpec("steady", rate_hz=150.0),
+               rt.TenantSpec("bursty", rate_hz=600.0, process="onoff",
+                             on_s=0.05, off_s=0.15)]
+    arrivals = rt.build_arrivals(tenants, duration_s=0.2,
+                                 n_items=len(pool), seed=3)
+    # ON-OFF arrivals only land inside ON windows
+    for a in arrivals:
+        if a.tenant.name == "bursty":
+            assert (a.t % 0.2) < 0.05 + 1e-9
+    with rt.ServingLoop(srv, poll_interval_s=0.005) as loop:
+        rep = rt.run_open_loop(loop, pool, arrivals, time_scale=0.0)
+    assert rep.completed == rep.submitted == len(arrivals)
+    assert rep.mismatched == 0 and rep.unresolved == 0
+    assert set(rep.tenants) == {"steady", "bursty"}
+
+
+def test_closed_loop_calibration_mode():
+    srv = rt.RuntimeServer(n_sm=2, metrics=rt.MetricsRegistry())
+    pool = _pool_items()
+    tenants = [rt.TenantSpec("a", rate_hz=1.0),
+               rt.TenantSpec("b", rate_hz=1.0)]
+    with rt.ServingLoop(srv, poll_interval_s=0.005) as loop:
+        rep = rt.run_closed_loop(loop, pool, tenants, n_per_tenant=4,
+                                 seed=5)
+    assert rep.mode == "closed"
+    assert rep.submitted == 8
+    assert rep.completed == 8
+    assert rep.unresolved == 0 and rep.mismatched == 0
+    assert rep.throughput_per_s > 0
+
+
+def test_build_arrivals_deterministic_and_independent():
+    tens = [rt.TenantSpec("a", rate_hz=500.0),
+            rt.TenantSpec("b", rate_hz=500.0, process="onoff")]
+    a1 = rt.build_arrivals(tens, 0.5, n_items=4, seed=9)
+    a2 = rt.build_arrivals(tens, 0.5, n_items=4, seed=9)
+    assert [(x.t, x.tenant.name, x.item) for x in a1] == \
+           [(x.t, x.tenant.name, x.item) for x in a2]
+    a3 = rt.build_arrivals(tens, 0.5, n_items=4, seed=10)
+    assert [(x.t, x.tenant.name, x.item) for x in a1] != \
+           [(x.t, x.tenant.name, x.item) for x in a3]
+    # per-tenant generators: adding a tenant never perturbs tenant "a"
+    a4 = rt.build_arrivals(tens + [rt.TenantSpec("c", rate_hz=100.0)],
+                           0.5, n_items=4, seed=9)
+    assert [(x.t, x.item) for x in a1 if x.tenant.name == "a"] == \
+           [(x.t, x.item) for x in a4 if x.tenant.name == "a"]
+    with pytest.raises(ValueError, match="unknown arrival process"):
+        rt.TenantSpec("x", rate_hz=1.0, process="uniform")
+    with pytest.raises(ValueError, match="rate_hz"):
+        rt.TenantSpec("x", rate_hz=0.0)
+
+
+# --------------------------------------------------- SLA-weighted drain
+
+def _equal_cost_pending(srv, n_each, clients):
+    code, launch, g0, _ = _bitonic()
+    for i in range(n_each * len(clients)):
+        srv.submit(code, *launch, g0.copy(),
+                   client=clients[i % len(clients)])
+
+
+def test_sla_arrange_weighted_interleave():
+    """Equal-cost requests under weights 3:1 arrange 3 "a" picks per
+    "b" pick — weighted fair queueing over virtual time."""
+    srv = rt.RuntimeServer(n_sm=1,
+                           policy=pol.SlaDrain({"a": 3.0, "b": 1.0}))
+    _equal_cost_pending(srv, 8, ("a", "b"))
+    order = [r.client for r in srv.policy.arrange(srv._pending)]
+    assert order.count("a") == order.count("b") == 8
+    assert order[:8].count("a") == 6          # 3:1 service in any prefix
+    assert order[:8].count("b") == 2
+    srv._pending = []                         # nothing left queued
+
+
+def test_sla_priority_tiers_are_strict():
+    srv = rt.RuntimeServer(n_sm=1, policy="sla")
+    code, launch, g0, _ = _bitonic()
+    srv.submit(code, *launch, g0.copy(), client="lo", priority=0)
+    srv.submit(code, *launch, g0.copy(), client="hi", priority=5)
+    srv.submit(code, *launch, g0.copy(), client="lo", priority=0)
+    srv.submit(code, *launch, g0.copy(), client="hi", priority=5)
+    order = [(r.priority, r.client)
+             for r in srv.policy.arrange(srv._pending)]
+    assert order == [(5, "hi"), (5, "hi"), (0, "lo"), (0, "lo")]
+    results, _ = srv.drain()
+    assert len(results) == 4
+
+
+def test_sla_observed_cycle_shares_track_weights():
+    """Acceptance: weights 3:1 yield observed per-tenant SM-cycle shares
+    within 20% of 3:1 over a window-bounded drain prefix (where the
+    backlog is deep enough that arrangement order is the share)."""
+    srv = rt.RuntimeServer(n_sm=2, max_batch=8,
+                           policy=rt.SlaDrain({"gold": 3.0,
+                                               "bronze": 1.0}))
+    _equal_cost_pending(srv, 20, ("gold", "bronze"))
+    _, stats = srv.drain(max_windows=2)
+    gold = stats.by_tenant["gold"].sm_cycles
+    bronze = stats.by_tenant.get("bronze",
+                                 rt.TenantStats()).sm_cycles
+    share = gold / max(gold + bronze, 1)
+    assert abs(share - 0.75) <= 0.75 * 0.20, (gold, bronze)
+    srv.drain()                               # serve the rest
+    assert srv.pending() == 0
+    # cumulative tenant_stats carry observed cycles too
+    assert srv.tenant_stats["gold"].sm_cycles > 0
+    assert srv.tenant_stats["bronze"].sm_cycles > 0
+
+
+def test_sla_plumbing_and_defaults():
+    p = pol.make_policy("sla")
+    assert isinstance(p, pol.SlaDrain)
+    assert p.weight("anyone") == 1.0
+    p2 = pol.SlaDrain({"a": 2.0}, default_weight=0.5)
+    assert p2.weight("a") == 2.0 and p2.weight("z") == 0.5
+    assert "SlaDrain" in repr(p2)
+    # the server binds its registry so costs are CostModel predictions
+    srv = rt.RuntimeServer(n_sm=1, policy=p2)
+    assert p2._registry is srv.registry
+
+
+# ----------------------------------------------------- deadline shedding
+
+def test_deadline_expired_launch_is_shed():
+    srv = rt.RuntimeServer(n_sm=1, metrics=rt.MetricsRegistry())
+    code, launch, g0, seq = _bitonic()
+    doomed = srv.submit_future(code, *launch, g0.copy(), client="late",
+                               deadline_s=0.0)
+    ok = srv.submit_future(code, *launch, g0.copy(), client="ontime")
+    time.sleep(0.005)                     # let the deadline expire
+    results, stats = srv.drain()
+    assert stats.n_shed == 1
+    assert stats.n_launches == 1
+    assert ok.done() and doomed.done()
+    _assert_bit_identical(ok.result(), seq)
+    with pytest.raises(rt.DeadlineExceeded, match="shed"):
+        doomed.result()
+    assert srv.tenant_stats["late"].shed == 1
+    assert srv.metrics.counter("server.shed").value == 1
+    assert srv.metrics.counter("server.shed.late").value == 1
+    assert srv.metrics.gauge("drain.n_shed").value == 1
+    assert srv.pending() == 0             # shed work never requeues
+
+
+def test_deadline_met_completes_normally():
+    srv = rt.RuntimeServer(n_sm=1)
+    code, launch, g0, seq = _bitonic()
+    fut = srv.submit_future(code, *launch, g0.copy(), deadline_s=60.0,
+                            priority=2)
+    srv.drain()
+    _assert_bit_identical(fut.result(), seq)
+    assert srv.tenant_stats["anon"].shed == 0
+
+
+def test_shed_producer_fails_dependents():
+    """A shed producer marks its dependents dropped — they fail at
+    materialization instead of hanging or executing on stale memory."""
+    srv = rt.RuntimeServer(n_sm=1)
+    code, launch, g0, _ = _bitonic()
+    producer = srv.submit_future(code, *launch, g0.copy(),
+                                 deadline_s=0.0)
+    dependent = srv.submit_future(code, *launch, producer)
+    time.sleep(0.005)
+    srv.drain()
+    with pytest.raises(rt.DeadlineExceeded):
+        producer.result()
+    with pytest.raises(RuntimeError, match="dropped"):
+        dependent.result()
+    assert srv.pending() == 0
+
+
+def test_loop_sheds_under_deadline_pressure():
+    """Open-loop overload with a tight deadline: the loop sheds late
+    launches (distinct failure, counted) and still resolves EVERY
+    future — graceful degradation, not collapse."""
+    srv = rt.RuntimeServer(n_sm=1, metrics=rt.MetricsRegistry())
+    pool = _pool_items()
+    tenants = [rt.TenantSpec("flood", rate_hz=2000.0,
+                             deadline_s=0.005)]
+    arrivals = rt.build_arrivals(tenants, duration_s=0.05,
+                                 n_items=len(pool), seed=2)
+    assert len(arrivals) > 20
+    with rt.ServingLoop(srv, poll_interval_s=0.002) as loop:
+        rep = rt.run_open_loop(loop, pool, arrivals, time_scale=0.0)
+    assert rep.unresolved == 0
+    assert rep.submitted == len(arrivals)
+    assert rep.completed + rep.shed == rep.submitted
+    assert rep.shed > 0                       # the deadline really bit
+    assert rep.mismatched == 0
+    assert loop.shed == rep.shed
+    assert srv.metrics.counter("server.shed").value == rep.shed
+
+
+# ------------------------------------------------------ loop robustness
+
+def test_loop_survives_poisoned_window():
+    """Crash isolation: a poisoned launch fails its own future after
+    MAX_ATTEMPTS but the loop keeps serving everyone else."""
+    srv = rt.RuntimeServer(n_sm=2)
+    code, launch, g0, seq = _bitonic()
+    bad = srv.submit_future(code, *launch, g0.copy(), client="bad")
+    _poison(srv)
+    loop = rt.ServingLoop(srv, poll_interval_s=0.005).start()
+    try:
+        good = [loop.submit(code, *launch, g0.copy(), client="good")
+                for _ in range(3)]
+        loop.quiesce(timeout_s=60.0)
+        assert loop.running                   # the loop survived
+        assert loop.window_errors >= 1
+        assert loop.last_error is not None
+        for fut in good:
+            _assert_bit_identical(fut.result(), seq)
+        with pytest.raises(Exception):
+            bad.result()
+        # still serving after the failure
+        _assert_bit_identical(
+            loop.submit(code, *launch, g0.copy()).result(), seq)
+    finally:
+        loop.stop()
+
+
+def test_loop_admission_backpressure():
+    srv = rt.RuntimeServer(n_sm=1, max_pending=2)
+    code, launch, g0, _ = _bitonic()
+    loop = rt.ServingLoop(srv)                # not started: queue fills
+    loop.submit(code, *launch, g0.copy(), client="a")
+    loop.submit(code, *launch, g0.copy(), client="b")
+    with pytest.raises(rt.AdmissionError, match="queue full"):
+        loop.submit(code, *launch, g0.copy(), client="c")
+    assert srv.tenant_stats["c"].rejected == 1
+    loop.start()
+    try:
+        loop.quiesce()
+        # backpressure cleared once the loop drained the queue
+        loop.submit(code, *launch, g0.copy(), client="c").wait()
+    finally:
+        loop.stop()
+    assert srv.pending() == 0
+
+
+def test_quiesce_drains_everything():
+    srv = rt.RuntimeServer(n_sm=2)
+    code, launch, g0, _ = _bitonic()
+    with rt.ServingLoop(srv, poll_interval_s=0.01) as loop:
+        futs = [loop.submit(code, *launch, g0.copy(),
+                            client=f"t{i % 4}") for i in range(10)]
+        loop.quiesce()
+        assert srv.pending() == 0
+        assert srv._completed == {}
+        assert all(f.done() for f in futs)
+
+
+def test_stop_without_drain_leaves_queue_intact():
+    srv = rt.RuntimeServer(n_sm=1)
+    code, launch, g0, seq = _bitonic()
+    loop = rt.ServingLoop(srv, poll_interval_s=10.0,
+                          linger_s=5.0).start()
+    # linger keeps the loop from draining before we stop it
+    fut = loop.submit(code, *launch, g0.copy())
+    loop.stop(drain=False)
+    assert srv._serving_loop is None
+    if not fut.done():                        # drain manually instead
+        assert srv.pending() == 1
+        srv.drain()
+    _assert_bit_identical(fut.result(), seq)
+
+
+def test_result_waits_on_loop_never_drains_from_caller():
+    """While a loop owns the server, future.result() must not call
+    drain from the caller's thread — every drain stays on the loop
+    thread (the tracer/bookkeeping single-thread contract)."""
+    srv = rt.RuntimeServer(n_sm=1)
+    drain_threads = []
+    orig = srv.drain
+
+    def recording_drain(*a, **k):
+        drain_threads.append(threading.current_thread().name)
+        return orig(*a, **k)
+
+    srv.drain = recording_drain
+    code, launch, g0, seq = _bitonic()
+    with rt.ServingLoop(srv, poll_interval_s=0.005,
+                        name="loop-under-test") as loop:
+        fut = loop.submit(code, *launch, g0.copy())
+        _assert_bit_identical(fut.result(), seq)
+    assert drain_threads, "the loop itself must have drained"
+    assert set(drain_threads) == {"loop-under-test"}
+
+
+# ----------------------------------------------------- latency telemetry
+
+def test_latency_decomposition_consistent_under_loop():
+    """Per-sample: total latency >= queue-wait + device time (the three
+    histograms record in lockstep completion order)."""
+    srv = rt.RuntimeServer(n_sm=2, metrics=rt.MetricsRegistry())
+    code, launch, g0, _ = _bitonic()
+    n = 8
+    with rt.ServingLoop(srv, poll_interval_s=0.005) as loop:
+        futs = [loop.submit(code, *launch, g0.copy(),
+                            client=f"t{i % 2}") for i in range(n)]
+        for f in futs:
+            f.wait()
+        loop.quiesce()
+    h = srv.metrics.histogram
+    lat, qw, dev = (h("server.latency_s"), h("server.queue_wait_s"),
+                    h("server.device_s"))
+    assert lat.count == qw.count == dev.count == n
+    for total, wait, device in zip(lat._samples, qw._samples,
+                                   dev._samples):
+        assert wait >= 0 and device >= 0
+        assert total + 1e-9 >= wait + device
+    # per-tenant histograms partition the same samples
+    per_tenant = sum(h(f"server.latency_s.t{i}").count
+                     for i in range(2))
+    assert per_tenant == n
+
+
+def test_every_launch_closes_trace_pair_under_loop(tracer):
+    """Completed, shed AND poisoned-dropped launches all close their
+    async launch lifecycle — no leaked b/e events."""
+    srv = rt.RuntimeServer(n_sm=2)
+    code, launch, g0, _ = _bitonic()
+    bad = srv.submit_future(code, *launch, g0.copy(), client="bad")
+    _poison(srv)
+    loop = rt.ServingLoop(srv, poll_interval_s=0.005).start()
+    try:
+        loop.submit(code, *launch, g0.copy(), client="ok").wait()
+        doomed = loop.submit(code, *launch, g0.copy(), client="late",
+                             deadline_s=0.0)
+        loop.quiesce(timeout_s=60.0)
+    finally:
+        loop.stop()
+    assert bad.done() and doomed.done()
+    pairs = tracer.async_pairs("launch")
+    assert len(pairs) == 3
+    for ticket, phases in pairs.items():
+        assert phases == ["b", "e"], (ticket, phases)
+
+
+def test_shed_trace_end_carries_error(tracer):
+    srv = rt.RuntimeServer(n_sm=1)
+    code, launch, g0, _ = _bitonic()
+    srv.submit_future(code, *launch, g0.copy(), deadline_s=0.0)
+    time.sleep(0.005)
+    srv.drain()
+    (_ph, _cat, _id, _name, _ts, attrs), = [
+        e for e in tracer._async if e[0] == "e"]
+    assert attrs.get("shed") is True
+    assert "deadline" in attrs.get("error", "")
+
+
+def test_deferred_queue_wait_spans_parent_at_root(tracer):
+    """Satellite regression: a launch left queued by a partial drain
+    gets its queue-wait span at the TRACE ROOT when finally packed —
+    not nested inside the later drain's window, whose extent it
+    overlaps.  Launches packed in their first drain keep nesting under
+    their window (the PR7 span-tree pin)."""
+    srv = rt.RuntimeServer(n_sm=1, max_batch=1)
+    code, launch, g0, _ = _bitonic()
+    for _ in range(3):
+        srv.submit(code, *launch, g0.copy())
+    srv.drain(max_windows=1)      # packs 1, defers 2
+    srv.drain()                   # packs the deferred 2
+    drains = [r for r in tracer.roots if r.name == "drain"]
+    assert len(drains) == 2
+    root_qw = [r for r in tracer.roots if r.name == "queue-wait"]
+    nested_qw = [s for d in drains for s in tracer.find("queue-wait", d)]
+    assert len(root_qw) == 2      # the two deferred launches
+    assert len(nested_qw) == 1    # the first drain's own launch
+    w0 = tracer.find("window", drains[0])[0]
+    assert nested_qw[0] in w0.children
+    # each deferred wait genuinely overlaps the first drain's extent
+    for qw in root_qw:
+        assert qw.t0 <= drains[0].t1 <= qw.t1
+
+
+def test_loop_metrics_counters():
+    srv = rt.RuntimeServer(n_sm=1, metrics=rt.MetricsRegistry())
+    code, launch, g0, _ = _bitonic()
+    with rt.ServingLoop(srv, poll_interval_s=0.005) as loop:
+        loop.submit(code, *launch, g0.copy()).wait()
+        loop.quiesce()
+        assert loop.iterations >= 1
+        assert loop.served >= 1
+    m = srv.metrics
+    assert m.counter("loop.iterations").value == loop.iterations
+    assert m.counter("loop.window_errors").value == 0
+    assert m.gauge("loop.running").value == 0
