@@ -18,6 +18,10 @@ results are machine-readable.
                        makespan, skewed-duration workload      [ours]
   bench_runtime_mixed_compiled — legacy + DSL-compiled mixed
                        workload drain accounting per policy    [ours]
+  bench_runtime_profile — architectural profiling: per-tenant
+                       energy, instruction mix, SIMT efficiency
+                       + live customization advisor (Table 6
+                       derived from serving telemetry)          [ours]
   bench_runtime_sharded — device-parallel SM sharding: drain
                        makespan scaling at 1/4/8 SMs over
                        forced host devices, bit-exact check    [ours]
@@ -135,6 +139,26 @@ def latency_extras(srv):
     if jit:
         out["jit"] = jit
     return out
+
+
+def profile_extras(srv):
+    """Architectural-profile columns for ``runtime_*`` rows served by a
+    profiling server (``RuntimeServer(profile=True)``): total and
+    per-tenant dynamic energy, SIMT efficiency and the instruction mix
+    by unit class, straight from the profiler's report (schema:
+    docs/observability.md).  Empty when profiling was off."""
+    prof = getattr(srv, "profiler", None)
+    if prof is None:
+        return {}
+    rep = prof.report()
+    return {"schema_version": rep["schema_version"],
+            "energy_eu": rep["total"]["energy_eu"],
+            "simt_efficiency": rep["total"]["simt_efficiency"],
+            "class_issues": rep["total"]["class_issues"],
+            "energy_by_tenant": {t: a["energy_eu"]
+                                 for t, a in rep["tenants"].items()},
+            "simt_by_tenant": {t: a["simt_efficiency"]
+                               for t, a in rep["tenants"].items()}}
 
 
 def table2_area():
@@ -487,6 +511,93 @@ def bench_runtime_mixed_compiled(n_launches=16, n_sm=2):
              extra={**drain_extras(stats), **latency_extras(srv)})
 
 
+#: the advisor must find at least this predicted dynamic-energy saving
+#: for the controlled mul-free tenant (paper Table 6 direction)
+PROFILE_ADVISOR_SAVING_FLOOR = 0.10
+
+
+def bench_runtime_profile(n_launches=12, n_sm=2):
+    """Architectural profiling of a served mixed workload (profile.* /
+    energy.* families, ``--profile`` on the serving CLI).
+
+    The paper-kernel mix is joined by a dedicated ``mulfree`` tenant
+    running a narrow-block AddK (8 of 32 lanes active, no IMUL/IMAD):
+    the profiler must report its SIMT efficiency as 0.25 by
+    construction, and the live customization advisor — fed only the
+    observed per-module activity — must find a minimal MachineConfig
+    (no multiplier, no third read port, depth-1 warp stack) whose
+    predicted dynamic-energy saving clears
+    ``PROFILE_ADVISOR_SAVING_FLOOR`` (the paper's Table 6 result,
+    derived from serving telemetry instead of static binary analysis).
+    A mul-using module (matmul's IMADs) must keep its multiplier.
+    Every ticket is oracle-checked; the row's extras carry the
+    per-tenant energy / SIMT-efficiency / instruction-mix columns.
+    """
+    import jax
+    from repro.launch.gpgpu_serve import (AddK, build_workload,
+                                          metrics_document)
+    from repro.obs.profile import SCHEMA_VERSION
+    jax.clear_caches()
+    work = build_workload(n_launches, include_compiled=False)
+    narrow = AddK(13, block_w=8)
+    srv = rt.RuntimeServer(n_sm=n_sm, metrics=rt.MetricsRegistry(),
+                           profile=True)
+    tickets = {}
+    t0 = time.perf_counter()
+    for i, (name, mod, n, code, (grid, bd), g0) in enumerate(work):
+        t = srv.submit(code, grid, bd, g0.copy(),
+                       client=f"tenant{i % 3}")
+        tickets[t] = (mod, n, g0)
+    for i in range(4):
+        g0 = narrow.make_gmem(np.random.default_rng(100 + i))
+        t = srv.submit(narrow.build(), *narrow.launch(), g0.copy(),
+                       client="mulfree")
+        tickets[t] = (narrow, None, g0)
+    results, stats = srv.drain()
+    wall = time.perf_counter() - t0
+    for t, (mod, n, g0) in tickets.items():
+        np.testing.assert_array_equal(
+            np.asarray(results[t].gmem)[mod.out_slice(n)],
+            mod.oracle(g0, n))
+
+    prof = srv.profiler.report()
+    doc = metrics_document(srv)
+    assert prof["schema_version"] == SCHEMA_VERSION
+    assert doc["schema_version"] == SCHEMA_VERSION
+    # the CI profile validator's invariants, asserted at bench time too
+    for tname, a in prof["tenants"].items():
+        assert a["energy_eu"] > 0, tname
+        assert 0.0 < a["simt_efficiency"] <= 1.0, (tname, a)
+        assert sum(a["class_issues"].values()) == a["issues"], tname
+    mf = prof["tenants"]["mulfree"]
+    assert abs(mf["simt_efficiency"] - 0.25) < 1e-9, mf
+    assert mf["class_issues"]["mul"] == 0, mf
+
+    # raw binaries register under a hash-derived name; resolve it
+    mf_name = srv.registry.as_module(narrow.build()).name
+    adv = prof["modules"][mf_name]["advisor"]
+    saving = adv["predicted_saving"]
+    assert not adv["suggested"]["enable_mul"]
+    assert adv["suggested"]["num_read_operands"] == 2
+    assert saving >= PROFILE_ADVISOR_SAVING_FLOOR, adv
+    # a module that multiplies must keep its multiplier
+    mul_mods = [m for m, a in prof["modules"].items()
+                if a["class_issues"]["mul"]]
+    assert mul_mods, "workload has no mul-using module"
+    for m in mul_mods:
+        assert prof["modules"][m]["advisor"]["suggested"]["enable_mul"], m
+
+    emit(f"runtime_profile_{len(tickets)}x_{n_sm}sm",
+         wall * 1e6 / len(tickets),
+         f"energy_eu={prof['total']['energy_eu']:.0f};"
+         f"simt_efficiency={prof['total']['simt_efficiency']:.3f};"
+         f"mulfree_simt={mf['simt_efficiency']:.3f};"
+         f"advisor_saving={100 * saving:.1f}%",
+         extra={**drain_extras(stats), **latency_extras(srv),
+                **profile_extras(srv),
+                "advisor": {mf_name: adv}})
+
+
 def bench_runtime_sharded(n_launches=8, sms=(1, 4, 8)):
     """Device-parallel SM sharding: drain-throughput scaling across
     forced host devices (ROADMAP "shard the sm axis" acceptance row).
@@ -780,12 +891,14 @@ def smoke() -> None:
     bench_runtime_skewed()
     bench_runtime_longtail()
     bench_runtime_mixed_compiled()
+    bench_runtime_profile()
     bench_runtime_serving()
     import jax
     if len(jax.devices()) > 1:      # forced-device CI leg; single-device
         bench_runtime_sharded()     # smoke skips the redundant fallback
     bench_compiler()
     _check_latency_rows()
+    _check_profile_rows()
 
 
 def _check_latency_rows() -> None:
@@ -806,6 +919,26 @@ def _check_latency_rows() -> None:
                 (r["name"], k, v)
         assert p50 <= p90 <= p99, (r["name"], p50, p90, p99)
     print(f"# latency percentiles present and finite on "
+          f"{len(rows)} rows", flush=True)
+
+
+def _check_profile_rows() -> None:
+    """Pin the architectural-profile contract on the smoke trajectory
+    point: every profiled row must carry a ``schema_version`` stamp,
+    positive total and per-tenant energy, SIMT efficiency in (0, 1],
+    and a non-empty per-class instruction mix."""
+    from repro.obs.profile import SCHEMA_VERSION
+    rows = [r for r in _ROWS if "simt_efficiency" in r.get("extra", {})]
+    assert rows, "no BENCH rows carry architectural-profile columns"
+    for r in rows:
+        e = r["extra"]
+        assert e["schema_version"] == SCHEMA_VERSION, r["name"]
+        assert e["energy_eu"] > 0, r["name"]
+        assert 0.0 < e["simt_efficiency"] <= 1.0, r["name"]
+        assert e["class_issues"] and sum(e["class_issues"].values()) > 0
+        for t, en in e["energy_by_tenant"].items():
+            assert en > 0, (r["name"], t)
+    print(f"# architectural-profile columns present on "
           f"{len(rows)} rows", flush=True)
 
 
@@ -852,6 +985,7 @@ def main() -> None:
     bench_runtime_skewed()
     bench_runtime_longtail()
     bench_runtime_mixed_compiled()
+    bench_runtime_profile()
     bench_runtime_serving()
     bench_compiler()
     kernel_micro()

@@ -70,24 +70,33 @@ class EnergyReport:
         return f"E={self.total:,.0f} eu ({parts})"
 
 
-def simt_energy(res: GridResult, cfg: MachineConfig,
-                n_sm: int = 1) -> EnergyReport:
-    """Dynamic energy of a grid execution on the configured SM(s)."""
+def activity_energy(op_issues, op_lanes, stack_ops: float,
+                    kernel_cycles: float, cfg: MachineConfig,
+                    n_sm: int = 1) -> EnergyReport:
+    """Dynamic energy of an observed *activity vector* — the raw
+    ``(NUM_OPCODES,)`` issue/lane counts plus warp-stack operations and
+    the kernel makespan in cycles — on the configured SM(s).
+
+    This is the pricing primitive behind :func:`simt_energy` (one
+    launch) and the serving profiler's per-tenant aggregates
+    (:mod:`repro.obs.profile` accumulates many launches' counters and
+    prices the sum), so a live energy attribution and the offline
+    per-launch number can never disagree on the model.
+    """
     comp: Dict[str, float] = {k: 0.0 for k in
                               ("alu", "mul", "gmem", "smem", "bra", "pred",
                                "ctrl", "regfile", "fetch", "stack", "idle")}
     for op in range(isa.NUM_OPCODES):
-        lanes = float(res.op_lanes[op])
-        issues = float(res.op_issues[op])
+        lanes = float(op_lanes[op])
+        issues = float(op_issues[op])
         cls = classify(op)
         comp[cls] += lanes * E_EVENT[cls]
         rr, rw = _REG_PORTS[cls]
         comp["regfile"] += lanes * (rr * E_EVENT["regread"] +
                                     rw * E_EVENT["regwrite"])
         comp["fetch"] += issues * E_EVENT["fetch"]
-    comp["stack"] += float(res.stack_ops) * E_EVENT["stack"]
+    comp["stack"] += float(stack_ops) * E_EVENT["stack"]
 
-    kernel_cycles = float(res.sm_cycles(n_sm))
     idle_per_cycle = n_sm * (
         E_IDLE["base"]
         + cfg.n_sp * E_IDLE["sp_lane"]
@@ -95,8 +104,15 @@ def simt_energy(res: GridResult, cfg: MachineConfig,
         + (cfg.n_sp * E_IDLE["third_port_lane"]
            if cfg.num_read_operands >= 3 else 0.0)
         + 8 * cfg.warp_stack_depth * E_IDLE["stack_entry"])
-    comp["idle"] = kernel_cycles * idle_per_cycle
+    comp["idle"] = float(kernel_cycles) * idle_per_cycle
     return EnergyReport(sum(comp.values()), comp)
+
+
+def simt_energy(res: GridResult, cfg: MachineConfig,
+                n_sm: int = 1) -> EnergyReport:
+    """Dynamic energy of a grid execution on the configured SM(s)."""
+    return activity_energy(res.op_issues, res.op_lanes, res.stack_ops,
+                           res.sm_cycles(n_sm), cfg, n_sm)
 
 
 def scalar_energy(res: GridResult, n_threads: int) -> EnergyReport:

@@ -110,17 +110,27 @@ class AddK:
     packing can.  Mirrors the paper-kernel module interface
     (build/launch/make_gmem/out_slice/oracle) so ``drain_workload``
     oracle-checks it like any tenant kernel.
+
+    ``block_w`` (default a full warp) narrows the block to fewer
+    threads: a ``block_w=8`` variant issues full warps with only 8 of
+    32 lanes active — SIMT efficiency 0.25 by construction.  The
+    profiler benchmarks use it as the controlled *inefficient,
+    mul-free* tenant whose advisor-suggested config (no multiplier, no
+    third read port, depth-1 stack) shows the paper's Table 6
+    customization saving from observed activity alone.
     """
 
     GMEM_WORDS = 128
 
     def __init__(self, k: int, in_at: int = 0, out_at: int = 64,
-                 grid=(1, 1)):
+                 grid=(1, 1), block_w: int = 32):
         assert 1 <= k <= 60, "k+4 instructions must fit the 64 bucket"
+        assert 1 <= block_w <= 32, "one warp: 1..32 threads"
         self.k = k
         self.in_at = in_at
         self.out_at = out_at
         self.grid = grid
+        self.block_w = block_w
 
     def build(self, n=None) -> np.ndarray:
         p = asm.Program(f"addk{self.k}")
@@ -136,18 +146,19 @@ class AddK:
         return p.finish()
 
     def launch(self, n=None):
-        return self.grid, (32, 1)
+        return self.grid, (self.block_w, 1)
 
     def make_gmem(self, rng, n=None) -> np.ndarray:
         g = np.zeros(self.GMEM_WORDS, np.int32)
-        g[self.in_at:self.in_at + 32] = rng.integers(0, 1 << 16, 32)
+        g[self.in_at:self.in_at + self.block_w] = \
+            rng.integers(0, 1 << 16, self.block_w)
         return g
 
     def out_slice(self, n=None):
-        return slice(self.out_at, self.out_at + 32)
+        return slice(self.out_at, self.out_at + self.block_w)
 
     def oracle(self, g0, n=None):
-        return g0[self.in_at:self.in_at + 32] + self.k
+        return g0[self.in_at:self.in_at + self.block_w] + self.k
 
 
 def build_longtail_workload(n_launches: int = 8, seed: int = 0):
@@ -195,7 +206,8 @@ def drain_workload(work, n_sm: int, tenants: int = 4,
                    max_window_cycles: int = None,
                    resident: bool = False,
                    metrics: "obs.MetricsRegistry" = None,
-                   shard_sm: bool = False):
+                   shard_sm: bool = False,
+                   profile: bool = False):
     """Submit ``work`` to a fresh cold-cache server and drain it.
 
     Oracle-checks every ticket; returns ``(server, stats, wall_s)``.
@@ -216,7 +228,7 @@ def drain_workload(work, n_sm: int, tenants: int = 4,
                            max_window_cycles=max_window_cycles,
                            resident_gmem=resident,
                            metrics=metrics or obs.MetricsRegistry(),
-                           shard_sm=shard_sm)
+                           shard_sm=shard_sm, profile=profile)
     jit_before = obs.jit_summary()
     tickets = {}
     t0 = time.perf_counter()
@@ -242,8 +254,12 @@ def metrics_document(srv, loadgen=None) -> dict:
     ``--metrics`` print, ``--metrics-out`` dump, and the BENCH JSON rows
     all derive from this one shape.  A loadgen run attaches its
     :class:`~repro.runtime.LoadReport` under ``"loadgen"`` — the shape
-    the CI serving smoke validates (p50/p99 present, zero unresolved)."""
-    doc = {"metrics": srv.metrics.snapshot(),
+    the CI serving smoke validates (p50/p99 present, zero unresolved).
+    ``schema_version`` stamps the document so downstream BENCH tooling
+    can evolve the shape safely."""
+    from repro.obs.profile import SCHEMA_VERSION
+    doc = {"schema_version": SCHEMA_VERSION,
+           "metrics": srv.metrics.snapshot(),
            "jit": getattr(srv, "jit_attribution", {}),
            "transfers": rt.TRANSFERS.snapshot()}
     if loadgen is not None:
@@ -317,7 +333,7 @@ def serve_loadgen(work, args):
                            max_window_cycles=args.max_window_cycles,
                            resident_gmem=args.resident_gmem,
                            metrics=obs.MetricsRegistry(),
-                           shard_sm=args.shard_sm)
+                           shard_sm=args.shard_sm, profile=args.profile)
     jit_before = obs.jit_summary()
     pool = loadgen_pool(work)
     tenants = build_tenants(args.tenants, args.rate, weights,
@@ -370,7 +386,7 @@ def serve_loop(work, args):
                            max_window_cycles=args.max_window_cycles,
                            resident_gmem=args.resident_gmem,
                            metrics=obs.MetricsRegistry(),
-                           shard_sm=args.shard_sm)
+                           shard_sm=args.shard_sm, profile=args.profile)
     futs = []
     t0 = time.perf_counter()
     with rt.ServingLoop(srv) as loop:
@@ -470,6 +486,17 @@ def main(argv=None):
                     help="dump the metrics document (registry snapshot "
                          "+ jit attribution + transfer counters) as "
                          "JSON to PATH")
+    ap.add_argument("--profile", action="store_true",
+                    help="architectural profiling: fold every completed "
+                         "launch's device counters into per-tenant/"
+                         "per-module instruction mix, SIMT efficiency, "
+                         "divergence telemetry and dynamic energy "
+                         "(profile.* / energy.* metric families); zero "
+                         "added device transfers")
+    ap.add_argument("--profile-out", metavar="PATH", default=None,
+                    help="write the architectural profile report (per-"
+                         "tenant/per-module activity + customization "
+                         "advisor) as JSON to PATH (implies --profile)")
     ap.add_argument("--loop", action="store_true",
                     help="serve through a background ServingLoop "
                          "(continuous drain) instead of one explicit "
@@ -508,6 +535,8 @@ def main(argv=None):
 
     if args.skewed and args.longtail:
         ap.error("--skewed and --longtail are mutually exclusive")
+    if args.profile_out:
+        args.profile = True
     if args.loadgen:
         args.loop = True
     if args.sla and not args.loadgen:
@@ -541,7 +570,8 @@ def main(argv=None):
                                               args.policy,
                                               args.max_window_cycles,
                                               resident=args.resident_gmem,
-                                              shard_sm=args.shard_sm)
+                                              shard_sm=args.shard_sm,
+                                              profile=args.profile)
     finally:
         if args.trace_out:
             obs.TRACER.stop()
@@ -567,6 +597,27 @@ def main(argv=None):
         with open(args.metrics_out, "w") as f:
             json.dump(metrics_document(srv, loadgen=report), f, indent=1)
         print(f"[serve] wrote metrics snapshot to {args.metrics_out}")
+    if args.profile and srv.profiler is not None:
+        prof = srv.profiler.report()
+        tot = prof["total"]
+        print(f"[profile] {prof['launches']} launches profiled: "
+              f"{tot['energy_eu']:,.0f} eu dynamic energy, SIMT "
+              f"efficiency {tot['simt_efficiency']:.3f}, instruction "
+              f"mix {tot['class_issues']}")
+        for t, a in prof["tenants"].items():
+            print(f"[profile]   {t}: {a['launches']} launches, "
+                  f"{a['energy_eu']:,.0f} eu, simt "
+                  f"{a['simt_efficiency']:.3f}, max_sp {a['max_sp']}")
+        for name, a in prof["modules"].items():
+            adv = a["advisor"]
+            print(f"[profile]   module {name}: advisor predicts "
+                  f"{100 * adv['predicted_saving']:.1f}% energy saving "
+                  f"with {adv['suggested']}")
+        if args.profile_out:
+            with open(args.profile_out, "w") as f:
+                json.dump(prof, f, indent=1)
+            print(f"[serve] wrote architectural profile to "
+                  f"{args.profile_out}")
     if t_seq is not None and not args.loop:
         print(f"[serve] throughput vs sequential: {t_seq / wall:.2f}x")
     return report if args.loadgen else stats

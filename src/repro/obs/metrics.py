@@ -87,16 +87,24 @@ class Histogram:
     holding the same samples would compute.  Beyond ``max_samples``
     retained samples the bucket table keeps counting but quantiles
     reflect the first ``max_samples`` values (bounded memory for a
-    long-lived server); the default cap is far above any drain batch.
+    long-lived server); the overflow is *visible*, not silent:
+    ``dropped_samples`` counts every sample the quantiles no longer
+    see, and ``stats()`` / ``render_snapshot`` surface it so a reader
+    of a long-lived server's p99 knows when the tail estimate went
+    stale.  The default cap is far above any drain batch.
     """
 
     BASE = 1e-6
-    __slots__ = ("max_samples", "count", "total", "_samples", "_buckets")
+    __slots__ = ("max_samples", "count", "total", "dropped_samples",
+                 "_samples", "_buckets")
 
     def __init__(self, max_samples: int = 200_000) -> None:
         self.max_samples = max_samples
         self.count = 0
         self.total = 0.0
+        #: samples recorded past the retention cap — counted by the
+        #: bucket table but invisible to the exact quantiles
+        self.dropped_samples = 0
         self._samples: List[float] = []
         self._buckets: Dict[int, int] = {}
 
@@ -106,6 +114,8 @@ class Histogram:
         self.total += v
         if len(self._samples) < self.max_samples:
             self._samples.append(v)
+        else:
+            self.dropped_samples += 1
         k = 0 if v <= self.BASE else math.ceil(math.log2(v / self.BASE))
         self._buckets[k] = self._buckets.get(k, 0) + 1
 
@@ -121,7 +131,8 @@ class Histogram:
     def stats(self) -> dict:
         """JSON-safe summary: count/sum/min/max + exact p50/p90/p99 +
         the log2 bucket table as ``[upper_edge, count]`` pairs."""
-        out: dict = {"count": self.count, "sum": self.total}
+        out: dict = {"count": self.count, "sum": self.total,
+                     "dropped_samples": self.dropped_samples}
         if self._samples:
             arr = np.asarray(self._samples, np.float64)
             out.update(min=float(arr.min()), max=float(arr.max()),
@@ -152,6 +163,7 @@ class _NullHistogram:
     __slots__ = ()
     count = 0
     total = 0.0
+    dropped_samples = 0
 
     def record(self, v: Number) -> None:
         pass
@@ -160,7 +172,8 @@ class _NullHistogram:
         return float("nan")
 
     def stats(self) -> dict:
-        return {"count": 0, "sum": 0.0, "buckets": []}
+        return {"count": 0, "sum": 0.0, "dropped_samples": 0,
+                "buckets": []}
 
 
 _NULL_COUNTER = _NullCounter()
@@ -259,10 +272,13 @@ def render_snapshot(snap: dict, prefix: str = "") -> str:
         lines.append(f"{prefix}histograms:")
         for k, h in snap["histograms"].items():
             if h.get("count"):
-                lines.append(
-                    f"{prefix}  {k}: n={h['count']} p50={h['p50']:.4g} "
-                    f"p90={h['p90']:.4g} p99={h['p99']:.4g} "
-                    f"max={h['max']:.4g}")
+                line = (f"{prefix}  {k}: n={h['count']} p50={h['p50']:.4g} "
+                        f"p90={h['p90']:.4g} p99={h['p99']:.4g} "
+                        f"max={h['max']:.4g}")
+                if h.get("dropped_samples"):
+                    line += (f" (quantiles exclude "
+                             f"{h['dropped_samples']} dropped samples)")
+                lines.append(line)
             else:
                 lines.append(f"{prefix}  {k}: n=0")
     return "\n".join(lines)

@@ -14,11 +14,16 @@
   ``submit`` and closed at completion (or drop), so a drain's trace
   shows every launch's submit→complete extent alongside the host
   phases that served it.
+* **Counter samples** — time-series points on named Perfetto counter
+  tracks (:meth:`Tracer.counter`): queue depth, device utilization,
+  energy rate, shed rate.  Each sample carries one or more numeric
+  series and renders as a stacked area chart above the spans.
 
 ``export`` writes Chrome-trace / Perfetto JSON (load ``trace.json`` in
 ``chrome://tracing`` or https://ui.perfetto.dev): spans become complete
 (``"ph": "X"``) events on the runtime track, async events become
-``"b"``/``"e"`` pairs on the launch track.
+``"b"``/``"e"`` pairs on the launch track, counter samples become
+``"C"`` events on their own named tracks.
 
 A disabled tracer (the default) returns one shared null span whose
 ``__enter__``/``set`` are no-ops — the runtime instruments its hot
@@ -123,6 +128,8 @@ class Tracer:
         #: finished async records: (ph, cat, id, name, ts, attrs)
         self._async: List[Tuple[str, str, str, str, float, dict]] = []
         self._open_async: Dict[Tuple[str, str], str] = {}
+        #: counter-track samples: (track name, ts, {series: value})
+        self._counters: List[Tuple[str, float, dict]] = []
         self._t0 = time.perf_counter()
         return self
 
@@ -182,6 +189,17 @@ class Tracer:
             return                       # begin predates start(): drop
         self._async.append(("e", cat, str(id_), name, self._now(), attrs))
 
+    def counter(self, name: str, **values) -> None:
+        """Record one sample on the Perfetto counter track ``name``.
+
+        Each keyword is one numeric series on that track (Perfetto
+        stacks multiple series of one counter event); samples export as
+        ``"ph": "C"`` events.  Like every other emission this is a
+        cheap no-op while the tracer is disabled."""
+        if not self.enabled:
+            return
+        self._counters.append((name, self._now(), values))
+
     # ------------------------------------------------------------- export
 
     def _walk(self, span: Span, out: List[dict]) -> None:
@@ -203,6 +221,10 @@ class Tracer:
             events.append({"name": name, "ph": ph, "cat": cat,
                            "id": id_, "pid": 1, "tid": 2, "ts": ts * 1e6,
                            "args": _json_safe(attrs)})
+        for name, ts, values in self._counters:
+            events.append({"name": name, "ph": "C", "cat": "counter",
+                           "pid": 1, "tid": 3, "ts": ts * 1e6,
+                           "args": _json_safe(values)})
         return {"traceEvents": events, "displayTimeUnit": "ms",
                 "otherData": {"producer": "repro.obs"}}
 
@@ -234,6 +256,11 @@ class Tracer:
             if c == cat:
                 out.setdefault(id_, []).append(ph)
         return out
+
+    def counter_samples(self, name: str) -> List[dict]:
+        """The recorded {series: value} samples of one counter track,
+        in record order (test hook)."""
+        return [vals for n, _ts, vals in self._counters if n == name]
 
 
 #: Process-wide tracer the runtime stack emits into.  Disabled by

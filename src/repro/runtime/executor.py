@@ -167,6 +167,8 @@ class MultiSMReport(NamedTuple):
     n_blocks: int               # real (non-padding) blocks executed
     device_gmem_words: int = 0  # words the stacked gmem allocation holds
     useful_gmem_words: int = 0  # words the launches actually asked for
+    max_sp: int = 0             # warp-stack high-water mark (max over blocks)
+    overflow: bool = False      # any block's warp stack overflowed
 
     @property
     def kernel_cycles(self) -> int:
@@ -332,16 +334,28 @@ class DeviceGrid:
         return self._host
 
     def report(self) -> MultiSMReport:
-        """Executed per-SM cycle counters (batched host fetch)."""
-        _, sm_cyc = self._host_fetch()
+        """Executed per-SM cycle counters (batched host fetch).
+
+        Divergence telemetry rides along: ``max_sp`` / ``overflow``
+        max-reduce over the executed blocks from the same fetch — the
+        aggregation used to sum only issues/lanes/stack_ops and
+        silently drop both, so a stack overflow on any block was
+        invisible at the report level.
+        """
+        c, sm_cyc = self._host_fetch()
         hi_lo = np.asarray(sm_cyc, np.int64)
+        nb = int(sum(self._blocks))
+        max_sp = np.asarray(c.max_sp, np.int64)
+        overflow = np.asarray(c.overflow)
         return MultiSMReport(
             n_sm=self.n_sm,
             per_sm_cycles=(hi_lo[0] << 16) + hi_lo[1],
             n_steps=self.n_steps,
-            n_blocks=int(sum(self._blocks)),
+            n_blocks=nb,
             device_gmem_words=int(np.prod(self._gmems.shape)),
-            useful_gmem_words=int(sum(self._orig_lens)))
+            useful_gmem_words=int(sum(self._orig_lens)),
+            max_sp=int(max_sp[:nb].max()) if nb else 0,
+            overflow=bool(overflow[:nb].any()))
 
     def to_results(self, host_gmem: bool = True) -> List[GridResult]:
         """Materialize one :class:`GridResult` per launch.

@@ -101,6 +101,8 @@ class DrainStats(NamedTuple):
     pool: Optional[Dict[str, int]] = None   # GmemPool.stats() snapshot
     n_devices: int = 1           # devices the SM axis sharded over
     n_shed: int = 0              # launches shed past their deadline
+    energy_eu: float = 0.0       # dynamic energy of the drained launches
+    #                              (model units; 0.0 unless profiling is on)
 
     @property
     def device_cycles(self) -> np.ndarray:
@@ -175,7 +177,8 @@ class RuntimeServer:
                  gmem_pool_entries: Optional[int] = None,
                  metrics: Optional[MetricsRegistry] = None,
                  tracer: Optional[Tracer] = None,
-                 shard_sm: bool = False):
+                 shard_sm: bool = False,
+                 profile: bool = False):
         self.n_sm = n_sm
         self.cfg = cfg
         #: device-parallel SM execution: every dispatch group lowers
@@ -191,6 +194,23 @@ class RuntimeServer:
         #: reduces every emission to a no-op (and never a device sync).
         self.metrics = METRICS if metrics is None else metrics
         self.tracer = TRACER if tracer is None else tracer
+        #: architectural profiler (``--profile``): folds every completed
+        #: launch's device counters — already host-side from the
+        #: executor's one batched fetch, so zero added transfers — into
+        #: per-tenant/per-module activity, energy accounting and the
+        #: ``profile.*`` / ``energy.*`` metric families.  None when off;
+        #: ``profiler.report()`` is the ``--profile-out`` document.
+        #: Imported lazily: ``obs.profile`` prices through
+        #: ``core.energy``, whose compat re-export chain
+        #: (energy → scheduler → runtime → server) would otherwise
+        #: close an import cycle when ``repro.core.energy`` is the
+        #: process's first repro import.
+        if profile:
+            from ..obs.profile import ArchProfiler
+            self.profiler: Optional["ArchProfiler"] = \
+                ArchProfiler(cfg, n_sm, self.metrics)
+        else:
+            self.profiler = None
         #: per-ticket submit/packed/dispatched wall-clock milestones
         self._timings: Dict[int, _LaunchTiming] = {}
         # default: one SM-wide super-step per dispatch — small groups
@@ -711,6 +731,7 @@ class RuntimeServer:
         n_windows = n_sub_batches = n_shed = 0
         useful_words = padded_words = sm_slots = 0
         makespan = busy = 0
+        energy_eu = 0.0
         by_tenant: Dict[str, TenantStats] = {}
         by_bucket: Dict[int, BucketStats] = {}
         queue = self.policy.arrange(self._pending)
@@ -856,10 +877,38 @@ class RuntimeServer:
                                    self.tenant_stats.setdefault(
                                        req.client, TenantStats())):
                             ts.sm_cycles += cyc
+                        end_attrs: dict = {"observed_cycles": cyc}
+                        if res.overflow:
+                            # a launch's warp stack overflowed: results
+                            # past the clipped reconvergence point are
+                            # suspect — surface it loudly
+                            self.metrics.counter(
+                                "server.stack_overflow").inc()
+                            self.metrics.counter(
+                                f"server.stack_overflow.{req.client}"
+                            ).inc()
+                            end_attrs["stack_overflow"] = True
+                        if self.profiler is not None:
+                            # counters are host-side already (the one
+                            # batched fetch behind to_results) — pure
+                            # host arithmetic, zero added transfers
+                            lp = self.profiler.observe(
+                                res, tenant=req.client,
+                                module=req.spec.code.name,
+                                ticket=req.ticket,
+                                code=req.spec.code.code)
+                            energy_eu += lp.energy.total
+                            end_attrs["energy_eu"] = round(
+                                lp.energy.total, 3)
+                            end_attrs["simt_efficiency"] = round(
+                                lp.simt_efficiency, 6)
                         self.tracer.end_async(
-                            "launch", req.ticket, observed_cycles=cyc)
+                            "launch", req.ticket, **end_attrs)
                 rep = dg.report()
-                disp_sp.set(observed_cycles=rep.kernel_cycles)
+                disp_sp.set(observed_cycles=rep.kernel_cycles,
+                            max_sp=rep.max_sp)
+                if rep.overflow:
+                    disp_sp.set(stack_overflow=True)
                 per_sm += rep.per_sm_cycles
                 n_blocks += rep.n_blocks
                 n_steps += rep.n_steps
@@ -895,7 +944,7 @@ class RuntimeServer:
             by_tenant=by_tenant, by_bucket=by_bucket,
             makespan_cycles=makespan, busy_cycles=busy,
             pool=self.gmem_pool.stats(), n_devices=self.n_devices,
-            n_shed=n_shed)
+            n_shed=n_shed, energy_eu=energy_eu)
         drain_sp.set(n_launches=n_launches, n_windows=n_windows,
                      n_shed=n_shed, wall_s=round(wall, 6))
         self._publish_drain(stats)
@@ -924,6 +973,22 @@ class RuntimeServer:
         g("drain.busy_cycles").set(stats.busy_cycles)
         g("drain.useful_gmem_words").set(stats.useful_gmem_words)
         g("drain.padded_gmem_words").set(stats.padded_gmem_words)
+        if self.profiler is not None:
+            g("drain.energy_eu").set(round(stats.energy_eu, 3))
+        # Perfetto counter tracks: one sample per drain on each series,
+        # so the exported trace carries load/efficiency/energy/overload
+        # time-series alongside the span tree (cheap no-ops when the
+        # tracer is off)
+        tr = self.tracer
+        tr.counter("queue_depth", pending=len(self._pending))
+        tr.counter("device_utilization",
+                   duration_balance=round(stats.duration_balance, 6),
+                   occupancy=round(stats.occupancy, 6))
+        if self.profiler is not None:
+            tr.counter("energy_rate",
+                       eu_per_s=round(
+                           safe_div(stats.energy_eu, stats.wall_s), 3))
+        tr.counter("shed_rate", shed=stats.n_shed)
         if stats.n_devices > 1:
             g("drain.shard.n_devices").set(stats.n_devices)
             g("drain.shard.device_skew").set(round(stats.device_skew, 6))

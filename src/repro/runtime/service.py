@@ -238,6 +238,12 @@ class ServingLoop:
                 if self.server.pending() or self.server._completed:
                     self.iterations += 1
                     m.counter("loop.iterations").inc()
+                    # queue-depth counter track: one pre-drain sample
+                    # per iteration, so the trace's time-series shows
+                    # the backlog each drain faced (drain itself
+                    # samples the post-drain residue)
+                    self.server.tracer.counter(
+                        "queue_depth", pending=self.server.pending())
                     try:
                         _res, stats = self.server.drain(
                             max_windows=self.max_windows_per_drain,

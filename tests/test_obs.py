@@ -77,6 +77,19 @@ def test_histogram_sample_cap_keeps_counting():
     assert h.count == 6                     # bucket table keeps counting
     assert h.percentile(100) == 4.0         # quantiles over retained cap
     assert sum(n for _e, n in h.stats()["buckets"]) == 6
+    # the truncation is visible, not silent: stats count the samples the
+    # quantiles no longer see, and the text rendering says so
+    assert h.dropped_samples == 2
+    assert h.stats()["dropped_samples"] == 2
+    text = obs.render_snapshot({"histograms": {"h": h.stats()}})
+    assert "exclude 2 dropped samples" in text
+    # under the cap nothing is dropped and the renderer stays quiet
+    h2 = obs.Histogram(max_samples=4)
+    h2.record(1.0)
+    assert h2.dropped_samples == 0
+    assert h2.stats()["dropped_samples"] == 0
+    assert "dropped" not in obs.render_snapshot(
+        {"histograms": {"h": h2.stats()}})
 
 
 def test_registry_snapshot_and_family():
@@ -312,13 +325,18 @@ def test_chrome_trace_schema(tmp_path, tracer):
     events = doc["traceEvents"]
     assert doc["displayTimeUnit"] == "ms" and events
     for ev in events:
-        assert ev["ph"] in ("X", "b", "e")
+        assert ev["ph"] in ("X", "b", "e", "C")
         assert isinstance(ev["name"], str) and ev["name"]
         assert isinstance(ev["ts"], float) and ev["ts"] >= 0
         assert isinstance(ev["pid"], int) and isinstance(ev["tid"], int)
         json.dumps(ev["args"])
         if ev["ph"] == "X":
             assert ev["cat"] == "runtime" and ev["dur"] >= 0
+        elif ev["ph"] == "C":
+            # counter tracks: numeric sample values on their own tid
+            assert ev["cat"] == "counter" and ev["tid"] == 3
+            assert ev["args"] and all(
+                isinstance(v, (int, float)) for v in ev["args"].values())
         else:
             assert ev["cat"] == "launch" and "id" in ev
     # every launch lifecycle is a b/e pair on the async track
@@ -326,6 +344,48 @@ def test_chrome_trace_schema(tmp_path, tracer):
     assert len(asyncs) == 6
     ids = {ev["id"] for ev in asyncs}
     assert all(sum(1 for ev in asyncs if ev["id"] == i) == 2 for i in ids)
+    # drains always publish the standing counter tracks when tracing
+    counters = {ev["name"] for ev in events if ev["ph"] == "C"}
+    assert {"queue_depth", "device_utilization", "shed_rate"} <= counters
+
+
+def test_chrome_trace_counters_and_shed_pairs(tmp_path, tracer):
+    """Exported trace under deadline shedding: every async b begins an
+    e (shed launches close their pair with ``shed=True``), and the
+    drain's ``ph:"C"`` counter tracks report the shed in the same
+    document (satellite: counter-track schema + shed-path closure)."""
+    import time as _time
+    tr = tracer
+    code, grid, bd, g0 = _launch_args()
+    srv = rt.RuntimeServer(n_sm=1, metrics=obs.MetricsRegistry())
+    doomed = srv.submit_future(code, grid, bd, g0.copy(), client="late",
+                               deadline_s=0.0)
+    ok = srv.submit_future(code, grid, bd, g0.copy(), client="ontime")
+    _time.sleep(0.005)                    # let the deadline expire
+    srv.drain()
+    tr.stop()
+    doc = tr.export(str(tmp_path / "shed-trace.json"))
+    events = doc["traceEvents"]
+    # both lifecycles closed: two balanced b/e pairs, one flagged shed
+    asyncs = [ev for ev in events if ev["ph"] in ("b", "e")]
+    by_id = {}
+    for ev in asyncs:
+        by_id.setdefault(ev["id"], []).append(ev["ph"])
+    assert set(by_id) == {str(doomed.ticket), str(ok.ticket)}
+    assert all(sorted(v) == ["b", "e"] for v in by_id.values())
+    ends = {ev["id"]: ev["args"] for ev in asyncs if ev["ph"] == "e"}
+    assert ends[str(doomed.ticket)].get("shed") is True
+    assert "shed" not in ends[str(ok.ticket)]
+    # the shed also lands on the drain's counter tracks
+    shed_samples = [ev for ev in events
+                    if ev["ph"] == "C" and ev["name"] == "shed_rate"]
+    assert shed_samples and shed_samples[-1]["args"]["shed"] == 1
+    util = [ev for ev in events
+            if ev["ph"] == "C" and ev["name"] == "device_utilization"]
+    assert util and all(
+        isinstance(v, (int, float)) for v in util[-1]["args"].values())
+    # document round-trips through json (Perfetto-loadable)
+    assert json.loads(json.dumps(doc)) == doc
 
 
 def test_tracer_disabled_records_nothing():
@@ -351,8 +411,8 @@ def test_tracer_disabled_records_nothing():
 def test_instrumented_path_bit_exact_and_transfer_free():
     code, grid, bd, g0 = _launch_args("autocorr", 32)
 
-    def run(metrics):
-        srv = rt.RuntimeServer(n_sm=2, metrics=metrics)
+    def run(metrics, profile=False):
+        srv = rt.RuntimeServer(n_sm=2, metrics=metrics, profile=profile)
         t = [srv.submit(code, grid, bd, g0.copy(), client=f"t{i}")
              for i in range(3)]
         w = rt.TRANSFERS.window()
@@ -364,17 +424,23 @@ def test_instrumented_path_bit_exact_and_transfer_free():
     try:
         obs.TRACER.start()
         traced, xfer_traced = run(obs.MetricsRegistry())
+        profiled, xfer_prof = run(obs.MetricsRegistry(), profile=True)
     finally:
         obs.TRACER.stop()
         obs.TRACER.clear()
-    for a, b in zip(plain, traced):
+    for a, b, c in zip(plain, traced, profiled):
         np.testing.assert_array_equal(a.gmem, b.gmem)
         np.testing.assert_array_equal(a.cycles_per_block,
                                       b.cycles_per_block)
         np.testing.assert_array_equal(a.op_issues, b.op_issues)
+        np.testing.assert_array_equal(a.gmem, c.gmem)
+        np.testing.assert_array_equal(a.op_issues, c.op_issues)
     # tracing/metrics on vs off: identical device traffic, and in
     # particular zero extra counter syncs (the tentpole's hard promise)
     assert xfer_traced == xfer_plain
+    # the architectural profiler prices host-side counters the drain
+    # already fetched — profiling adds zero device transfers too
+    assert xfer_prof == xfer_plain
 
 
 def test_instrumented_matches_sequential_oracle(tracer):

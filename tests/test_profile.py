@@ -1,0 +1,325 @@
+"""Suite for :mod:`repro.obs.profile` (PR 10 tentpole).
+
+Pins the architectural-profiling contracts:
+
+* **Per-launch profiles** — class mix partitions the issue/lane totals
+  exactly, SIMT efficiency is lanes / (issues × 32), and the launch's
+  energy is bit-identical to :func:`repro.core.energy.simt_energy` on
+  the same result (one pricing primitive, two entry points).
+* **Linearity** — an :class:`Activity` aggregate prices to the sum of
+  its constituent launches' energies (every model component is linear
+  in activity), so live attribution and offline per-launch numbers can
+  never disagree.
+* **Advisor** — observed-minimal configs: the multiplier stays iff
+  IMUL/IMAD issued, the third read port iff IMAD issued, the warp
+  stack shrinks to the observed high-water mark but never shrinks on a
+  truncated (overflowed) observation; the controlled mul-free
+  narrow-block tenant clears the paper's double-digit saving.
+* **Server wiring** — ``RuntimeServer(profile=True)`` folds every
+  drained launch into the profiler, exposes the drain's energy in
+  ``DrainStats.energy_eu``, attaches energy/SIMT attrs to the launch
+  trace pairs, and stamps the report with ``schema_version``.
+* **Overflow regression** — a kernel pushing the warp stack past its
+  depth surfaces ``max_sp``/``overflow`` through ``GridResult``,
+  ``MultiSMReport`` (the aggregation used to silently drop both) and
+  the server's ``server.stack_overflow`` counters + trace attrs.
+"""
+import numpy as np
+import pytest
+
+from repro import obs
+from repro import runtime as rt
+from repro.core import asm, isa, scheduler
+from repro.core.energy import simt_energy
+from repro.core.machine import MachineConfig
+from repro.core.programs import ALL
+from repro.launch.gpgpu_serve import AddK
+from repro.obs import profile as prof
+from repro.runtime import executor as ex
+
+
+@pytest.fixture
+def tracer():
+    obs.TRACER.start()
+    yield obs.TRACER
+    obs.TRACER.stop()
+    obs.TRACER.clear()
+
+
+def _run(name="bitonic", n=32, seed=0, cfg=MachineConfig(), n_sm=1):
+    mod = ALL[name]
+    code = mod.build(n)
+    grid, bd = mod.launch(n)
+    g0 = mod.make_gmem(np.random.default_rng(seed), n)
+    return scheduler.run_grid(code, grid, bd, g0.copy(), cfg=cfg,
+                              n_sm=n_sm), code
+
+
+# --------------------------------------------------------------------------
+# per-launch profiles
+
+
+def test_profile_launch_partitions_and_prices_exactly():
+    cfg = MachineConfig()
+    res, _code = _run("bitonic", 32)
+    lp = prof.profile_launch(res, cfg, n_sm=1, tenant="t0",
+                             module="bitonic", ticket=7)
+    assert lp.tenant == "t0" and lp.module == "bitonic" and lp.ticket == 7
+    # the class mix partitions the totals exactly — nothing dropped
+    assert lp.issues == int(res.op_issues.sum())
+    assert lp.lanes == int(res.op_lanes.sum())
+    assert sum(lp.class_issues.values()) == lp.issues
+    assert sum(lp.class_lanes.values()) == lp.lanes
+    assert set(lp.class_issues) == set(prof.CLASSES)
+    # SIMT efficiency is the paper's lane-occupancy ratio
+    assert lp.simt_efficiency == pytest.approx(
+        lp.lanes / (lp.issues * isa.WARP_SIZE))
+    assert 0.0 < lp.simt_efficiency <= 1.0
+    # one pricing primitive: profile energy == simt_energy, bit-equal
+    want = simt_energy(res, cfg, n_sm=1)
+    assert lp.energy.total == want.total
+    assert lp.energy.by_component == want.by_component
+    assert lp.kernel_cycles == res.sm_cycles(1)
+    assert lp.stack_ops == int(res.stack_ops)
+    assert not lp.overflow
+
+
+def test_activity_energy_is_sum_of_launch_energies():
+    cfg = MachineConfig()
+    runs = [_run("bitonic", 32, seed=s)[0] for s in range(3)]
+    runs.append(_run("autocorr", 32, seed=9)[0])
+    act = prof.Activity()
+    for r in runs:
+        act.add(r.op_issues, r.op_lanes, r.stack_ops, r.max_sp,
+                r.overflow, r.sm_cycles(1))
+    assert act.launches == len(runs)
+    # linearity: pricing the aggregate == summing per-launch prices
+    want = sum(simt_energy(r, cfg, 1).total for r in runs)
+    assert act.energy(cfg, 1).total == pytest.approx(want, rel=1e-12)
+    # the JSON shape is self-consistent
+    d = act.as_dict(cfg, 1)
+    assert d["launches"] == len(runs)
+    assert sum(d["class_issues"].values()) == d["issues"]
+    assert d["energy_eu"] == pytest.approx(
+        sum(d["energy_by_component"].values()), abs=0.1)
+
+
+# --------------------------------------------------------------------------
+# customization advisor
+
+
+def _synthetic_activity(imul=0, imad=0, iadd=100, max_sp=1,
+                        overflow=False):
+    issues = np.zeros(isa.NUM_OPCODES, np.int64)
+    lanes = np.zeros(isa.NUM_OPCODES, np.int64)
+    for op, n in ((isa.IMUL, imul), (isa.IMAD, imad), (isa.IADD, iadd)):
+        issues[op] = n
+        lanes[op] = n * isa.WARP_SIZE
+    act = prof.Activity()
+    act.add(issues, lanes, stack_ops=4, max_sp=max_sp,
+            overflow=overflow, kernel_cycles=1000)
+    return act
+
+
+def test_advise_keeps_mul_when_observed():
+    adv = prof.advise(_synthetic_activity(imul=10))
+    assert adv.suggested.enable_mul is True
+    assert adv.suggested.num_read_operands == 2   # no IMAD observed
+    adv = prof.advise(_synthetic_activity(imad=10))
+    assert adv.suggested.enable_mul is True
+    assert adv.suggested.num_read_operands == 3   # IMAD needs port 3
+
+
+def test_advise_drops_unused_units_and_shrinks_stack():
+    base = MachineConfig()
+    adv = prof.advise(_synthetic_activity(max_sp=1), base=base)
+    assert adv.suggested.enable_mul is False
+    assert adv.suggested.num_read_operands == 2
+    assert adv.suggested.warp_stack_depth == 1
+    assert adv.advised_energy < adv.base_energy
+    assert 0.0 < adv.predicted_saving < 1.0
+    # never grown past base, even if the observation says deeper
+    deep = prof.advise(_synthetic_activity(max_sp=99), base=base)
+    assert deep.suggested.warp_stack_depth == base.warp_stack_depth
+
+
+def test_advise_overflow_keeps_base_depth():
+    """A truncated stack observation is a lower bound: the advisor must
+    not 'shrink' to an overflowed high-water mark."""
+    adv = prof.advise(_synthetic_activity(max_sp=2, overflow=True),
+                      base=MachineConfig(warp_stack_depth=8))
+    assert adv.suggested.warp_stack_depth == 8
+
+
+def test_advisor_mulfree_tenant_clears_saving_floor():
+    """The paper's Table 6 story from observed activity: a mul-free
+    narrow-block tenant's advised config predicts a double-digit
+    dynamic-energy saving."""
+    cfg = MachineConfig()
+    narrow = AddK(13, block_w=8)
+    code = narrow.build()
+    res = scheduler.run_grid(code, *narrow.launch(),
+                             narrow.make_gmem(np.random.default_rng(0)))
+    act = prof.Activity()
+    for _ in range(4):
+        act.add(res.op_issues, res.op_lanes, res.stack_ops, res.max_sp,
+                res.overflow, res.sm_cycles(1))
+    assert act.simt_efficiency == pytest.approx(0.25)   # 8 of 32 lanes
+    adv = prof.advise(act, base=cfg, code=code)
+    assert adv.suggested.enable_mul is False
+    assert adv.suggested.num_read_operands == 2
+    assert adv.suggested.warp_stack_depth == 1
+    assert adv.predicted_saving >= 0.10
+    assert adv.problems == []            # static validation concurs
+    assert adv.as_dict()["suggested"]["enable_mul"] is False
+
+
+# --------------------------------------------------------------------------
+# aggregation + metric families
+
+
+def test_archprofiler_observe_emits_metric_families():
+    m = obs.MetricsRegistry()
+    p = prof.ArchProfiler(MachineConfig(), n_sm=1, metrics=m)
+    res, code = _run("bitonic", 32)
+    lp1 = p.observe(res, tenant="t0", module="bitonic", ticket=1,
+                    code=code)
+    lp2 = p.observe(res, tenant="t1", module="bitonic", ticket=2)
+    assert p.total.launches == 2
+    assert set(p.by_tenant) == {"t0", "t1"}
+    assert m.counter("profile.launches").value == 2
+    assert m.counter("profile.launches.t0").value == 1
+    assert m.counter("profile.issues").value == lp1.issues + lp2.issues
+    for cls, n in p.total.class_issues().items():
+        if n:
+            assert m.counter(f"profile.class_issues.{cls}").value == n
+    assert m.gauge("profile.simt_efficiency").value == pytest.approx(
+        p.total.simt_efficiency, abs=1e-6)
+    assert m.counter("energy.total_eu").value == pytest.approx(
+        lp1.energy.total + lp2.energy.total)
+    assert m.counter("energy.tenant.t0").value == pytest.approx(
+        lp1.energy.total)
+    assert m.histogram("energy.per_launch_eu").count == 2
+    assert m.histogram("energy.per_launch_eu.t0").count == 1
+    # the report is schema-stamped, JSON-safe, advisor attached
+    import json
+    rep = p.report()
+    json.dumps(rep)
+    assert rep["schema_version"] == prof.SCHEMA_VERSION
+    assert rep["launches"] == 2
+    assert set(rep["tenants"]) == {"t0", "t1"}
+    assert "advisor" in rep["modules"]["bitonic"]
+    # binary was recorded: the advisor cross-checked it statically
+    assert rep["modules"]["bitonic"]["advisor"]["problems"] == []
+
+
+# --------------------------------------------------------------------------
+# server wiring
+
+
+def test_server_profile_drain_attributes_energy(tracer):
+    mod = ALL["bitonic"]
+    code = mod.build(32)
+    grid, bd = mod.launch(32)
+    g0 = mod.make_gmem(np.random.default_rng(0), 32)
+    srv = rt.RuntimeServer(n_sm=2, metrics=obs.MetricsRegistry(),
+                           profile=True)
+    tickets = [srv.submit(code, grid, bd, g0.copy(), client=f"t{i}")
+               for i in range(3)]
+    results, stats = srv.drain()
+    assert srv.profiler is not None
+    assert srv.profiler.total.launches == 3
+    # drain-level energy == sum of the per-launch profiler energies
+    want = sum(simt_energy(results[t], srv.cfg, srv.n_sm).total
+               for t in tickets)
+    assert stats.energy_eu == pytest.approx(want, rel=1e-9)
+    assert srv.profiler.total.energy(srv.cfg, srv.n_sm).total == \
+        pytest.approx(want, rel=1e-9)
+    assert srv.metrics.counter("profile.launches").value == 3
+    assert srv.metrics.gauge("drain.energy_eu").value == \
+        pytest.approx(want, abs=0.01)
+    # every launch's trace pair closed with energy + SIMT attrs
+    tracer.stop()
+    ends = {ev["id"]: ev["args"]
+            for ev in tracer.to_chrome()["traceEvents"]
+            if ev["ph"] == "e"}
+    for t in tickets:
+        assert ends[str(t)]["energy_eu"] > 0
+        assert 0.0 < ends[str(t)]["simt_efficiency"] <= 1.0
+    # modules are hash-named for raw binaries; resolve through the
+    # registry like the CLI and benchmarks do
+    name = srv.registry.as_module(code).name
+    assert srv.profiler.by_module[name].launches == 3
+    assert srv.profiler.advise_module(name).predicted_saving >= 0.0
+
+
+def test_server_without_profile_has_no_profiler():
+    srv = rt.RuntimeServer(n_sm=1, metrics=obs.MetricsRegistry())
+    code, (grid, bd) = ALL["bitonic"].build(32), ALL["bitonic"].launch(32)
+    g0 = ALL["bitonic"].make_gmem(np.random.default_rng(0), 32)
+    srv.submit(code, grid, bd, g0.copy())
+    _res, stats = srv.drain()
+    assert srv.profiler is None
+    assert stats.energy_eu == 0.0
+    assert srv.metrics.counter("profile.launches").value == 0
+
+
+# --------------------------------------------------------------------------
+# overflow regression (satellite: MultiSMReport used to drop max_sp)
+
+
+def _deep_ssy(pushes=3):
+    """``pushes`` back-to-back SSYs then EXIT: each SSY pushes the warp
+    stack, so depth-2 hardware overflows on the third push."""
+    p = asm.Program("deepssy")
+    for _ in range(pushes):
+        p.ssy("out")
+    p.label("out")
+    p.exit()
+    return p.finish()
+
+
+def test_stack_overflow_surfaces_through_every_layer(tracer):
+    cfg = MachineConfig(warp_stack_depth=2)
+    code = _deep_ssy(pushes=3)
+    gmem = np.zeros(32, np.int32)
+
+    # GridResult: the raw counters see the truncation
+    res = scheduler.run_grid(code, (1, 1), (32, 1), gmem.copy(), cfg=cfg)
+    assert res.overflow
+    assert res.max_sp >= cfg.warp_stack_depth
+
+    # MultiSMReport: max-reduced over blocks from the same host fetch
+    # (the aggregation used to silently drop both fields)
+    dg = ex.execute([ex.LaunchSpec(code, (2, 1), (32, 1), gmem.copy())],
+                    n_sm=2, cfg=cfg)
+    rep = dg.report()
+    assert rep.overflow
+    assert rep.max_sp == res.max_sp
+
+    # a well-behaved kernel reports clean telemetry through the same path
+    ok = AddK(3)
+    dg2 = ex.execute([ex.LaunchSpec(ok.build(), *ok.launch(),
+                                    ok.make_gmem(np.random.default_rng(0)))],
+                     n_sm=1, cfg=MachineConfig())
+    rep2 = dg2.report()
+    assert not rep2.overflow and rep2.max_sp == 0
+
+    # server drain: counters + trace attribution
+    srv = rt.RuntimeServer(n_sm=1, cfg=cfg,
+                           metrics=obs.MetricsRegistry(), profile=True)
+    t = srv.submit(code, (1, 1), (32, 1), gmem.copy(), client="deep")
+    srv.drain()
+    assert srv.metrics.counter("server.stack_overflow").value == 1
+    assert srv.metrics.counter("server.stack_overflow.deep").value == 1
+    tracer.stop()
+    events = tracer.to_chrome()["traceEvents"]
+    end = next(ev for ev in events
+               if ev["ph"] == "e" and ev["id"] == str(t))
+    assert end["args"]["stack_overflow"] is True
+    disp = [ev for ev in events
+            if ev["ph"] == "X" and ev["name"] == "dispatch"]
+    assert any(ev["args"].get("stack_overflow") for ev in disp)
+    # and the profiler's aggregate remembers the overflowed launch
+    assert srv.profiler.total.overflow_launches == 1
+    assert srv.profiler.total.max_sp >= cfg.warp_stack_depth
